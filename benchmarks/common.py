@@ -1,0 +1,89 @@
+"""Shared benchmark plumbing: scheduler zoo + emulation runs + CSV out."""
+from __future__ import annotations
+
+import csv
+import pathlib
+import time
+
+from repro.core.profiles import PAPER_FUNCTIONS, ProfileTable
+from repro.core.workflows import PAPER_APPS
+from repro.cluster.emulator import ClusterSim
+from repro.cluster.workload import generate
+from repro.core.scheduler import ESGScheduler
+from repro.core.baselines.infless import INFlessScheduler
+from repro.core.baselines.fastgshare import FaSTGShareScheduler
+from repro.core.baselines.orion import OrionScheduler
+from repro.core.baselines.aquatope import AquatopeScheduler
+
+RESULTS = pathlib.Path(__file__).resolve().parent / "results"
+N_DEFAULT = 200
+SETTINGS = ["strict-light", "moderate-normal", "relaxed-heavy"]
+
+
+def paper_tables() -> dict[str, ProfileTable]:
+    return {n: ProfileTable.build(p) for n, p in PAPER_FUNCTIONS.items()}
+
+
+def make_scheduler(name: str, tables, **kw):
+    factories = {
+        "ESG": lambda: ESGScheduler(PAPER_APPS, tables, **kw),
+        "INFless": lambda: INFlessScheduler(PAPER_APPS, tables),
+        "FaST-GShare": lambda: FaSTGShareScheduler(PAPER_APPS, tables),
+        "Orion": lambda: OrionScheduler(PAPER_APPS, tables, **kw),
+        "Aquatope": lambda: AquatopeScheduler(PAPER_APPS, tables),
+    }
+    return factories[name]()
+
+
+def run_setting(name: str, setting: str, n: int = N_DEFAULT, seed: int = 0,
+                tables=None, sched=None, **sim_kw) -> dict:
+    tables = tables or paper_tables()
+    sched = sched or make_scheduler(name, tables)
+    sim = ClusterSim(PAPER_APPS, tables, PAPER_FUNCTIONS, sched,
+                     seed=seed, **sim_kw)
+    generate(sim, setting, n, PAPER_FUNCTIONS, seed=seed + 1)
+    t0 = time.time()
+    sim.run()
+    out = sim.summary()
+    out["setting"] = setting
+    out["wall_s"] = time.time() - t0
+    out["per_app"] = per_app_stats(sim)
+    return out
+
+
+def per_app_stats(sim: ClusterSim) -> dict:
+    stats: dict[str, dict] = {}
+    for inst in sim.completed:
+        d = stats.setdefault(inst.app.name, {"lat": [], "hit": 0, "n": 0})
+        lat = inst.finish_ms - inst.arrival_ms
+        d["lat"].append(lat)
+        d["n"] += 1
+        d["hit"] += int(lat <= inst.slo_ms)
+    out = {}
+    for app, d in stats.items():
+        lats = sorted(d["lat"])
+        out[app] = {
+            "n": d["n"],
+            "hit_rate": d["hit"] / d["n"],
+            "mean_ms": sum(lats) / len(lats),
+            "p95_ms": lats[int(0.95 * (len(lats) - 1))],
+        }
+    return out
+
+
+def app_costs(sim: ClusterSim) -> dict[str, float]:
+    out: dict[str, float] = {}
+    for t in sim.tasks:
+        app = t.jobs[0].inst.app.name
+        out[app] = out.get(app, 0.0) + t.cost
+    return out
+
+
+def write_csv(name: str, header: list[str], rows: list[list]):
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    path = RESULTS / f"{name}.csv"
+    with open(path, "w", newline="") as f:
+        w = csv.writer(f)
+        w.writerow(header)
+        w.writerows(rows)
+    return path

@@ -1,0 +1,43 @@
+"""Fig 10: ESG scheduling-overhead distribution per setting (+ brute-force
+comparison, §5.3: "the search time is 7258ms for 256 configurations")."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks import common
+from repro.core.astar import brute_force, esg_1q
+from repro.core.profiles import PAPER_FUNCTIONS, ProfileTable, Config
+
+
+def run(n: int = common.N_DEFAULT, seed: int = 0, log=print):
+    rows = []
+    for setting in common.SETTINGS:
+        r = common.run_setting("ESG", setting, n=n, seed=seed)
+        o = r  # summary carries the distribution stats
+        rows.append([setting, f"{o['mean_sched_overhead_ms']:.3f}",
+                     f"{o['p95_sched_overhead_ms']:.3f}"])
+        log(f"  {setting:16s} mean={o['mean_sched_overhead_ms']:.2f}ms "
+            f"p95={o['p95_sched_overhead_ms']:.2f}ms (paper: <10ms avg)")
+
+    # brute force vs ESG_1Q on a 3-stage app, 256 configs each
+    tables = [ProfileTable.build(PAPER_FUNCTIONS[f]) for f in
+              ("super_resolution", "segmentation", "classification")]
+    l0 = sum(t.fn.exec_ms(Config(1, 1, 1)) for t in tables)
+    t0 = time.perf_counter()
+    esg_1q(tables, l0, k=5)
+    t_astar = (time.perf_counter() - t0) * 1e3
+    t0 = time.perf_counter()
+    brute_force(tables, l0, k=5)
+    t_brute = (time.perf_counter() - t0) * 1e3
+    rows.append(["astar_vs_brute_ms", f"{t_astar:.2f}", f"{t_brute:.1f}"])
+    log(f"  ESG_1Q={t_astar:.1f}ms vs brute-force={t_brute:.0f}ms "
+        f"(paper: brute 7258ms)")
+    common.write_csv("fig10_overhead",
+                     ["setting", "mean_ms", "p95_ms"], rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

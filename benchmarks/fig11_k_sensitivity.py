@@ -1,0 +1,38 @@
+"""Fig 11: sensitivity to K (solutions kept in the config priority queue),
+strict-light; cost normalised to K=5."""
+from __future__ import annotations
+
+from benchmarks import common
+
+
+def run(n: int = 150, seed: int = 0, log=print):
+    rows = []
+    base_cost = None
+    for k in (1, 5, 20, 80):
+        tables = common.paper_tables()
+        sched = common.make_scheduler("ESG", tables, k=k)
+        r = common.run_setting("ESG", "strict-light", n=n, seed=seed,
+                               tables=tables, sched=sched)
+        if k == 5:
+            base_cost = r["total_cost"]
+    # second pass so normalisation has the K=5 reference
+    for k in (1, 5, 20, 80):
+        tables = common.paper_tables()
+        sched = common.make_scheduler("ESG", tables, k=k)
+        r = common.run_setting("ESG", "strict-light", n=n, seed=seed,
+                               tables=tables, sched=sched)
+        rows.append([k, f"{r['slo_hit_rate']:.4f}",
+                     f"{r['total_cost']/base_cost:.3f}",
+                     f"{r['mean_sched_overhead_ms']:.3f}",
+                     f"{r['mean_latency_ms']:.1f}"])
+        log(f"  K={k:3d} hit={r['slo_hit_rate']:.3f} "
+            f"cost(K5=1)={r['total_cost']/base_cost:.3f} "
+            f"ovh={r['mean_sched_overhead_ms']:.2f}ms")
+    common.write_csv("fig11_k_sensitivity",
+                     ["K", "slo_hit_rate", "cost_norm_k5",
+                      "mean_overhead_ms", "mean_latency_ms"], rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,44 @@
+"""Fig 6 + Fig 8: SLO hit rate and cost (normalised to ESG) per setting,
+overall and per application, for all five schedulers."""
+from __future__ import annotations
+
+import time
+
+from benchmarks import common
+
+SCHEDULERS = ["ESG", "INFless", "FaST-GShare", "Orion", "Aquatope"]
+
+
+def run(n: int = common.N_DEFAULT, seed: int = 0, log=print) -> list[dict]:
+    rows, out = [], []
+    for setting in common.SETTINGS:
+        tables = common.paper_tables()
+        esg_cost = None
+        for name in SCHEDULERS:
+            r = common.run_setting(name, setting, n=n, seed=seed,
+                                   tables=tables)
+            if name == "ESG":
+                esg_cost = r["total_cost"]
+            r["norm_cost"] = r["total_cost"] / esg_cost if esg_cost else 0.0
+            out.append(r)
+            log(f"  {setting:16s} {name:12s} hit={r['slo_hit_rate']:.3f} "
+                f"cost(norm)={r['norm_cost']:.2f} "
+                f"ovh={r['mean_sched_overhead_ms']:.2f}ms")
+            rows.append([setting, name, f"{r['slo_hit_rate']:.4f}",
+                         f"{r['total_cost']:.6f}", f"{r['norm_cost']:.3f}",
+                         f"{r['mean_latency_ms']:.1f}",
+                         f"{r['mean_sched_overhead_ms']:.3f}"])
+            # Fig 8 per-app detail
+            for app, st in r["per_app"].items():
+                rows.append([f"{setting}/app:{app}", name,
+                             f"{st['hit_rate']:.4f}", "", "",
+                             f"{st['mean_ms']:.1f}", ""])
+    common.write_csv("fig6_fig8_endtoend",
+                     ["setting", "scheduler", "slo_hit_rate", "total_cost",
+                      "cost_norm_to_esg", "mean_latency_ms",
+                      "mean_sched_overhead_ms"], rows)
+    return out
+
+
+if __name__ == "__main__":
+    run()

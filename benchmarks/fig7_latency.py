@@ -1,0 +1,26 @@
+"""Fig 7: per-application end-to-end latency distributions (relaxed-heavy)."""
+from __future__ import annotations
+
+from benchmarks import common
+from benchmarks.fig6_endtoend import SCHEDULERS
+
+
+def run(n: int = common.N_DEFAULT, seed: int = 0, log=print):
+    rows = []
+    tables = common.paper_tables()
+    for name in SCHEDULERS:
+        r = common.run_setting(name, "relaxed-heavy", n=n, seed=seed,
+                               tables=tables)
+        for app, st in r["per_app"].items():
+            rows.append([name, app, f"{st['mean_ms']:.1f}",
+                         f"{st['p95_ms']:.1f}", f"{st['hit_rate']:.4f}"])
+            log(f"  {name:12s} {app:32s} mean={st['mean_ms']:7.0f}ms "
+                f"p95={st['p95_ms']:7.0f}ms hit={st['hit_rate']:.2f}")
+    common.write_csv("fig7_latency",
+                     ["scheduler", "app", "mean_ms", "p95_ms", "hit_rate"],
+                     rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

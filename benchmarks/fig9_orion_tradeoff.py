@@ -1,0 +1,30 @@
+"""Fig 9: Orion's search-time/quality trade-off (strict-light).
+
+Sweeps the search cut-off; reports hit rate with the search time counted
+into latency vs not counted (the paper's blue vs green curves)."""
+from __future__ import annotations
+
+from benchmarks import common
+
+
+def run(n: int = 150, seed: int = 0, log=print):
+    rows = []
+    for cutoff in (5.0, 20.0, 50.0, 100.0):
+        for counted in (False, True):
+            tables = common.paper_tables()
+            sched = common.make_scheduler("Orion", tables, cutoff_ms=cutoff)
+            r = common.run_setting("Orion", "strict-light", n=n, seed=seed,
+                                   tables=tables, sched=sched,
+                                   count_overhead=counted)
+            rows.append([cutoff, counted, f"{r['slo_hit_rate']:.4f}",
+                         f"{r['mean_sched_overhead_ms']:.2f}"])
+            log(f"  cutoff={cutoff:6.1f}ms counted={counted!s:5s} "
+                f"hit={r['slo_hit_rate']:.3f}")
+    common.write_csv("fig9_orion_tradeoff",
+                     ["cutoff_ms", "search_time_counted", "slo_hit_rate",
+                      "mean_search_ms"], rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,64 @@
+"""§Roofline: the 40-cell (arch x shape) baseline table from the dry-run
+artifacts (single-pod mesh, per spec)."""
+from __future__ import annotations
+
+import json
+import pathlib
+
+from benchmarks import common
+from repro.configs.registry import ARCH_IDS, SHAPES
+
+DRYRUN = pathlib.Path(__file__).resolve().parent / "results" / "dryrun"
+
+
+def load_cell(arch: str, shape: str, mesh: str = "single",
+              tag: str = "") -> dict | None:
+    name = f"{arch}__{shape}__{mesh}" + (f"__{tag}" if tag else "")
+    p = DRYRUN / f"{name}.json"
+    if not p.exists():
+        return None
+    return json.loads(p.read_text())
+
+
+def run(log=print):
+    rows = []
+    log("  arch                        shape        dom   comp_ms  mem_ms "
+        " coll_ms  bound_ms  roofline%  useful%  fits16G")
+    for arch in ARCH_IDS:
+        for shape in SHAPES:
+            d = load_cell(arch, shape)
+            if d is None:
+                continue
+            if not d.get("applicable", True):
+                rows.append([arch, shape, "SKIP", "", "", "", "", "", "",
+                             d.get("skip_reason", "")])
+                continue
+            if d.get("status") != "ok":
+                rows.append([arch, shape, "ERROR", "", "", "", "", "", "",
+                             d.get("error", "")[:80]])
+                continue
+            r = d["roofline"]
+            rows.append([
+                arch, shape, r["dominant"],
+                f"{r['compute_s']*1e3:.2f}", f"{r['memory_s']*1e3:.2f}",
+                f"{r['collective_s']*1e3:.2f}", f"{r['bound_s']*1e3:.2f}",
+                f"{100*r['roofline_fraction']:.1f}",
+                f"{100*min(r['useful_ratio'], 9.99):.1f}",
+                str(d.get("fits_hbm16g", "")),
+            ])
+            log(f"  {arch:26s} {shape:12s} {r['dominant'][:4]:5s}"
+                f"{r['compute_s']*1e3:9.2f} {r['memory_s']*1e3:7.2f} "
+                f"{r['collective_s']*1e3:8.2f} {r['bound_s']*1e3:9.2f} "
+                f"{100*r['roofline_fraction']:9.1f} "
+                f"{100*min(r['useful_ratio'],9.99):8.1f}  "
+                f"{d.get('fits_hbm16g','')}")
+    common.write_csv(
+        "roofline_table",
+        ["arch", "shape", "dominant", "compute_ms", "memory_ms",
+         "collective_ms", "bound_ms", "roofline_pct", "useful_pct",
+         "fits_hbm16g"], rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

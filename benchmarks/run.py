@@ -1,0 +1,54 @@
+"""Benchmark orchestrator — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV lines per benchmark (us_per_call =
+wall time of the benchmark routine; derived = its headline metric), plus
+the per-figure detail written under benchmarks/results/*.csv.
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+
+def _run(name, fn, derive, *args, **kw):
+    t0 = time.perf_counter()
+    out = fn(*args, **kw)
+    us = (time.perf_counter() - t0) * 1e6
+    print(f"{name},{us:.0f},{derive(out)}", flush=True)
+    return out
+
+
+def main() -> None:
+    from benchmarks import (fig6_endtoend, fig7_latency, fig9_orion_tradeoff,
+                            fig10_overhead, fig11_k_sensitivity,
+                            fig12_ablation, groupsize_sensitivity,
+                            roofline_table, table4_missrate)
+
+    quick = "--quick" in sys.argv
+    n = 80 if quick else 200
+
+    print("name,us_per_call,derived")
+    r6 = _run("fig6_fig8_endtoend", fig6_endtoend.run,
+              lambda rs: "ESG_hit=" + "/".join(
+                  f"{r['slo_hit_rate']:.2f}" for r in rs
+                  if r["scheduler"] == "ESG"), n=n)
+    _run("fig7_latency", fig7_latency.run,
+         lambda rs: f"rows={len(rs)}", n=n)
+    _run("fig9_orion_tradeoff", fig9_orion_tradeoff.run,
+         lambda rs: f"rows={len(rs)}", n=min(n, 120))
+    _run("table4_missrate", table4_missrate.run,
+         lambda rs: "miss=" + "/".join(r[2] for r in rs), n=n)
+    _run("fig10_overhead", fig10_overhead.run,
+         lambda rs: f"esg_mean_ms={rs[0][1]}", n=n)
+    _run("fig11_k_sensitivity", fig11_k_sensitivity.run,
+         lambda rs: f"rows={len(rs)}", n=min(n, 120))
+    _run("fig12_ablation", fig12_ablation.run,
+         lambda rs: f"rows={len(rs)}", n=n)
+    _run("groupsize_sensitivity", groupsize_sensitivity.run,
+         lambda rs: f"g4_search_ms={rs[3][2]}")
+    _run("roofline_table", roofline_table.run,
+         lambda rs: f"cells={len(rs)}")
+
+
+if __name__ == "__main__":
+    main()

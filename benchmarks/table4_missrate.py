@@ -1,0 +1,32 @@
+"""Table 4: pre-planned configuration miss rate (Orion, Aquatope).
+
+A miss = the statically planned batch size exceeds the queue length when
+the stage is actually scheduled."""
+from __future__ import annotations
+
+from benchmarks import common
+
+
+def run(n: int = common.N_DEFAULT, seed: int = 0, log=print):
+    rows = []
+    paper = {"strict-light": (9.6, 85.5), "moderate-normal": (27.32, 59.85),
+             "relaxed-heavy": (51.68, 58.72)}
+    for setting in common.SETTINGS:
+        for name in ("Orion", "Aquatope"):
+            tables = common.paper_tables()
+            r = common.run_setting(name, setting, n=n, seed=seed,
+                                   tables=tables)
+            miss = (100.0 * r["config_misses"] / r["plan_uses"]
+                    if r["plan_uses"] else 0.0)
+            ref = paper[setting][0 if name == "Orion" else 1]
+            rows.append([setting, name, f"{miss:.2f}", f"{ref}"])
+            log(f"  {setting:16s} {name:9s} miss={miss:6.2f}% "
+                f"(paper: {ref}%)")
+    common.write_csv("table4_missrate",
+                     ["setting", "scheduler", "miss_rate_pct",
+                      "paper_miss_rate_pct"], rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

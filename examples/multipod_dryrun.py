@@ -1,0 +1,31 @@
+"""Multi-pod launch example: compile internlm2-20b's train step on the
+2x16x16 production mesh (512 fake devices) and print the memory/cost
+analysis — the per-cell version of ``python -m repro.launch.dryrun --all``.
+
+  PYTHONPATH=src python examples/multipod_dryrun.py [--arch X --shape Y]
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse  # noqa: E402
+
+from repro.launch.dryrun import run_cell  # noqa: E402
+from repro.models.model import RunOptions  # noqa: E402
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="internlm2_20b")
+    ap.add_argument("--shape", default="train_4k")
+    args = ap.parse_args()
+    out = run_cell(args.arch, args.shape, multi_pod=True,
+                   opts=RunOptions(), save=False)
+    assert out["status"] == "ok", out.get("error")
+    r = out["roofline"]
+    print(f"{args.arch} x {args.shape} on 2x16x16 (512 chips):")
+    print(f"  compile: {out['compile_s']:.1f}s; "
+          f"per-device peak mem {out['memory']['peak_bytes_est']/1e9:.2f} GB")
+    print(f"  roofline: compute {r['compute_s']*1e3:.1f}ms | "
+          f"memory {r['memory_s']*1e3:.1f}ms | "
+          f"collective {r['collective_s']*1e3:.1f}ms  "
+          f"-> {r['dominant']}-bound")
+    print(f"  collectives: {out['collectives']['by_op']}")

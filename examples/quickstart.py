@@ -1,0 +1,14 @@
+"""Quickstart: serve a small model with ESG-batched requests (real compute).
+
+Requests arrive on an AFW queue; ESG_1Q picks batch sizes from a measured
+profile lattice; real JAX prefill+decode steps serve each dispatched batch.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+from repro.launch.serve import serve_real
+
+if __name__ == "__main__":
+    out = serve_real(arch="internlm2_1_8b", n_requests=24, slo_ms=30_000,
+                     mean_interval_ms=30.0, gen_len=4, prompt_len=32)
+    print(f"served {out['n']} requests: hit={out['hit_rate']:.2f} "
+          f"p50={out['p50_ms']:.0f}ms p95={out['p95_ms']:.0f}ms")

@@ -1,0 +1,21 @@
+"""Serve LM *pipelines* (DAGs over the assigned architectures) on the
+emulated 16-host TPU cluster, scheduled by ESG vs a baseline.
+
+This is the paper's end-to-end scenario with the model zoo as the
+serverless functions: per-arch latency lattices come from the v5e roofline
+model (calibrated by the dry-run artifacts when present).
+
+  PYTHONPATH=src python examples/serve_pipeline.py
+"""
+from repro.launch.serve import ZOO_APPS, emulate
+
+if __name__ == "__main__":
+    print("workflows:", {k: [s.split(':')[1] for s in v.stages]
+                         for k, v in ZOO_APPS.items()})
+    for setting in ("strict-light", "relaxed-heavy"):
+        print(f"--- {setting} ---")
+        esg = emulate(setting=setting, n=150, scheduler="esg")
+        inf = emulate(setting=setting, n=150, scheduler="infless")
+        gain = esg["slo_hit_rate"] - inf["slo_hit_rate"]
+        save = (inf["total_cost"] / esg["total_cost"] - 1) * 100
+        print(f"    ESG vs INFless: hit {gain:+.2f}, cost saving {save:.0f}%")

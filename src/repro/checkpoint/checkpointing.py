@@ -1,0 +1,98 @@
+"""Sharded checkpointing with resharding restore (elastic rescale).
+
+Format: one ``manifest.json`` (pytree structure, shapes, dtypes, step,
+mesh metadata) + one ``.npy`` per leaf.  Leaves are gathered to host
+numpy before writing (fine at the scale this container runs; on a real
+pod each host writes its local shards — the manifest layout already keys
+leaves by path so a per-shard variant is a drop-in).
+
+Restore takes the *target* sharding tree: ``jax.device_put`` reshards,
+so restoring onto a different mesh shape (elastic scale up/down) or a
+different partitioning works out of the box — exercised by
+``tests/test_checkpoint.py`` and ``runtime/elastic.py``.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import re
+import shutil
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> list[tuple[str, Any]]:
+    flat, _ = jax.tree.flatten_with_path(tree)
+    out = []
+    for path, leaf in flat:
+        name = "/".join(
+            str(p.key) if hasattr(p, "key") else str(p.idx) for p in path)
+        out.append((name, leaf))
+    return out
+
+
+def save(ckpt_dir: str | pathlib.Path, step: int, tree,
+         keep: int = 3) -> pathlib.Path:
+    ckpt_dir = pathlib.Path(ckpt_dir)
+    tmp = ckpt_dir / f"step_{step:08d}.tmp"
+    final = ckpt_dir / f"step_{step:08d}"
+    tmp.mkdir(parents=True, exist_ok=True)
+    manifest = {"step": step, "leaves": {}}
+    for name, leaf in _flatten(tree):
+        arr = np.asarray(jax.device_get(leaf))
+        fname = name.replace("/", "__") + ".npy"
+        np.save(tmp / fname, arr)
+        manifest["leaves"][name] = {
+            "file": fname, "shape": list(arr.shape), "dtype": str(arr.dtype)}
+    with open(tmp / "manifest.json", "w") as f:
+        json.dump(manifest, f)
+    if final.exists():
+        shutil.rmtree(final)
+    tmp.rename(final)                     # atomic publish
+    _gc(ckpt_dir, keep)
+    return final
+
+
+def latest_step(ckpt_dir: str | pathlib.Path) -> Optional[int]:
+    ckpt_dir = pathlib.Path(ckpt_dir)
+    if not ckpt_dir.exists():
+        return None
+    steps = [int(m.group(1)) for p in ckpt_dir.iterdir()
+             if (m := re.fullmatch(r"step_(\d+)", p.name))]
+    return max(steps) if steps else None
+
+
+def restore(ckpt_dir: str | pathlib.Path, tree_like,
+            shardings=None, step: Optional[int] = None):
+    """Restore into the structure of ``tree_like``; reshard onto
+    ``shardings`` (same pytree) when given."""
+    ckpt_dir = pathlib.Path(ckpt_dir)
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {ckpt_dir}")
+    d = ckpt_dir / f"step_{step:08d}"
+    with open(d / "manifest.json") as f:
+        manifest = json.load(f)
+
+    names = [n for n, _ in _flatten(tree_like)]
+    flat_shardings = ([s for _, s in _flatten(shardings)]
+                      if shardings is not None else [None] * len(names))
+    leaves = []
+    for name, shard in zip(names, flat_shardings):
+        info = manifest["leaves"][name]
+        arr = np.load(d / info["file"])
+        if shard is not None:
+            arr = jax.device_put(arr, shard)
+        leaves.append(arr)
+    treedef = jax.tree.structure(tree_like)
+    return jax.tree.unflatten(treedef, leaves), manifest["step"]
+
+
+def _gc(ckpt_dir: pathlib.Path, keep: int):
+    steps = sorted(int(m.group(1)) for p in ckpt_dir.iterdir()
+                   if (m := re.fullmatch(r"step_(\d+)", p.name)))
+    for s in steps[:-keep]:
+        shutil.rmtree(ckpt_dir / f"step_{s:08d}", ignore_errors=True)

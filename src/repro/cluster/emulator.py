@@ -1,0 +1,447 @@
+"""Discrete-event serverless-cluster emulator (paper §4 methodology).
+
+Mirrors the paper's own evaluation setup: an OpenWhisk-like controller
+driving emulated invokers, with
+  * the (vcpu, vgpu) resource lattice per invoker (16 vCPU + 8 vTPU here —
+    the TPU-host adaptation of "16 vCPUs + 1 A100 split into 7 MIGs"),
+  * cold starts + 10-min keep-alive container pools,
+  * EWMA pre-warming (paper §4),
+  * the local-vs-remote data-passing model (locality benefit),
+  * Gaussian execution noise on top of the profile model,
+  * measured scheduling overhead folded into simulated latency (this is
+    what Fig 9 / Fig 10 measure).
+
+Schedulers plug in via the ``SchedulerPolicy`` protocol; the event loop,
+batching, dispatch bookkeeping, recheck list and accounting are shared so
+comparisons isolate the scheduling algorithm (paper §4.2).
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import itertools
+import time as _walltime
+from collections import defaultdict, deque
+from typing import Any, Callable, Optional
+
+import numpy as np
+
+from repro.core.profiles import (Config, FunctionProfile, ProfileTable,
+                                 VCPU_PRICE_PER_H, VGPU_PRICE_PER_H)
+from repro.core.workflows import Workflow
+
+KEEPALIVE_MS = 600_000.0          # OpenWhisk 10-minute keep-alive
+LOCAL_TRANSFER_MS = 1.0
+REMOTE_TRANSFER_FIXED_MS = 20.0
+REMOTE_TRANSFER_MS_PER_MB = 8.0   # ~125 MB/s remote store
+RECHECK_LIMIT = 3
+
+
+# ---------------------------------------------------------------------------
+# Jobs / instances
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class AppInstance:
+    app: Workflow
+    uid: int
+    arrival_ms: float
+    slo_ms: float                     # end-to-end budget
+    stage_invoker: dict = dataclasses.field(default_factory=dict)
+    pending_preds: dict = dataclasses.field(default_factory=dict)
+    done: bool = False
+    finish_ms: float = -1.0
+    plan: Any = None                  # Orion/Aquatope static plans
+
+    @property
+    def deadline_ms(self) -> float:
+        return self.arrival_ms + self.slo_ms
+
+
+@dataclasses.dataclass
+class Job:
+    inst: AppInstance
+    stage: str
+    ready_ms: float                   # when inputs became available
+
+
+@dataclasses.dataclass
+class Task:
+    jobs: list[Job]
+    stage: str
+    func: str
+    config: Config
+    invoker: int
+    start_ms: float
+    end_ms: float
+    cold: bool
+    cost: float
+
+
+# ---------------------------------------------------------------------------
+# Invokers
+# ---------------------------------------------------------------------------
+class Invoker:
+    def __init__(self, idx: int, vcpus: int, vgpus: int):
+        self.idx = idx
+        self.vcpus = vcpus
+        self.vgpus = vgpus
+        self.free_vcpu = vcpus
+        self.free_vgpu = vgpus
+        self.warm: dict[str, list[float]] = defaultdict(list)  # expiry times
+
+    def fits(self, c: Config) -> bool:
+        return self.free_vcpu >= c.vcpu and self.free_vgpu >= c.vgpu
+
+    def alloc(self, c: Config):
+        self.free_vcpu -= c.vcpu
+        self.free_vgpu -= c.vgpu
+
+    def release(self, c: Config):
+        self.free_vcpu += c.vcpu
+        self.free_vgpu += c.vgpu
+
+    def take_warm(self, func: str, now: float) -> bool:
+        pool = self.warm[func]
+        while pool and pool[0] < now:
+            pool.pop(0)               # expired keep-alive
+        if pool:
+            pool.pop(0)
+            return True
+        return False
+
+    def add_warm(self, func: str, expiry: float):
+        self.warm[func].append(expiry)
+        self.warm[func].sort()
+
+    def has_warm(self, func: str, now: float) -> bool:
+        return any(e >= now for e in self.warm[func])
+
+
+# ---------------------------------------------------------------------------
+# Scheduler protocol
+# ---------------------------------------------------------------------------
+class SchedulerPolicy:
+    """Interface the emulator drives.  ``plan`` returns a priority-ordered
+    list of configs for the queue's *current* stage (paper: configPQ);
+    ``placement`` is 'locality' (ESG/Orion/Aquatope) or 'fragmentation'
+    (INFless/FaST-GShare)."""
+    name = "base"
+    placement = "locality"
+    charged_overhead_ms = 0.0
+
+    def plan(self, sim: "ClusterSim", app: Workflow, stage: str,
+             jobs: list[Job], now: float) -> list[Config]:
+        raise NotImplementedError
+
+    def on_arrival(self, sim: "ClusterSim", inst: AppInstance, now: float):
+        pass
+
+
+# ---------------------------------------------------------------------------
+# The emulator
+# ---------------------------------------------------------------------------
+class ClusterSim:
+    def __init__(self,
+                 apps: dict[str, Workflow],
+                 tables: dict[str, ProfileTable],
+                 profiles: dict[str, FunctionProfile],
+                 scheduler: SchedulerPolicy,
+                 n_invokers: int = 16,
+                 vcpus: int = 16,
+                 vgpus: int = 8,
+                 noise_sigma: float = 0.05,
+                 seed: int = 0,
+                 count_overhead: bool = True,
+                 prewarm: bool = True,
+                 batching: bool = True,
+                 gpu_sharing: bool = True,
+                 initial_warm: int = 2):
+        self.apps = apps
+        self.tables = tables
+        self.profiles = profiles
+        self.sched = scheduler
+        self.invokers = [Invoker(i, vcpus, vgpus) for i in range(n_invokers)]
+        self.noise_sigma = noise_sigma
+        self.rng = np.random.default_rng(seed)
+        self.count_overhead = count_overhead
+        self.prewarm_on = prewarm
+        self.batching = batching
+        self.gpu_sharing = gpu_sharing
+
+        self.now = 0.0
+        self._events: list[tuple] = []
+        self._seq = itertools.count()
+        self.queues: dict[tuple[str, str], deque[Job]] = defaultdict(deque)
+        self.recheck: dict[tuple[str, str], int] = {}
+        self._blocked: set[tuple[str, str]] = set()
+        self.ewma: dict[str, tuple[float, float]] = {}   # func -> (interval, last)
+        if prewarm and initial_warm:
+            for inv in self.invokers:
+                for func in profiles:
+                    for _ in range(initial_warm):
+                        inv.add_warm(func, KEEPALIVE_MS)
+
+        # metrics
+        self.completed: list[AppInstance] = []
+        self.total_cost = 0.0
+        self.tasks: list[Task] = []
+        self.sched_overheads_ms: list[float] = []
+        self.cold_starts = 0
+        self.remote_transfers = 0
+        self.config_misses = 0        # pre-planned config infeasible (Table 4)
+        self.plan_uses = 0
+
+    # ---- events ----------------------------------------------------------
+    def push_event(self, t: float, kind: str, payload: Any):
+        heapq.heappush(self._events, (t, next(self._seq), kind, payload))
+
+    def add_arrival(self, app_name: str, t: float, slo_ms: float, uid: int):
+        inst = AppInstance(self.apps[app_name], uid, t, slo_ms)
+        self.push_event(t, "arrival", inst)
+
+    # ---- main loop -------------------------------------------------------
+    def run(self):
+        while self._events:
+            t, _, kind, payload = heapq.heappop(self._events)
+            self.now = max(self.now, t)
+            if kind == "arrival":
+                self._on_arrival(payload)
+            elif kind == "complete":
+                self._on_complete(payload)
+                self._blocked.clear()        # capacity changed: retry queues
+            elif kind == "prewarm":
+                func, inv = payload
+                self.invokers[inv].add_warm(func, self.now + KEEPALIVE_MS)
+                self._blocked.clear()
+            self._schedule_pass()
+        return self
+
+    # ---- handlers --------------------------------------------------------
+    def _on_arrival(self, inst: AppInstance):
+        self.sched.on_arrival(self, inst, self.now)
+        for s in inst.app.stages:
+            inst.pending_preds[s] = len(inst.app.predecessors(s))
+        for root in inst.app.roots:
+            key = (inst.app.name, root)
+            self.queues[key].append(Job(inst, root, self.now))
+            self._blocked.discard(key)
+
+    def _on_complete(self, task: Task):
+        inv = self.invokers[task.invoker]
+        inv.release(task.config)
+        inv.add_warm(task.func, self.now + KEEPALIVE_MS)
+        for job in task.jobs:
+            inst = job.inst
+            inst.stage_invoker[task.stage] = task.invoker
+            succs = inst.app.edges.get(task.stage, ())
+            if not succs and not inst.done:
+                inst.done = True
+                inst.finish_ms = self.now
+                self.completed.append(inst)
+            for s in succs:
+                inst.pending_preds[s] -= 1
+                if inst.pending_preds[s] == 0:
+                    skey = (inst.app.name, s)
+                    self.queues[skey].append(Job(inst, s, self.now))
+                    self._blocked.discard(skey)
+
+    # ---- scheduling pass ---------------------------------------------------
+    def _schedule_pass(self):
+        keys = [k for k, q in self.queues.items()
+                if q and k not in self._blocked]
+        for key in keys:
+            # round-robin over AFW queues, draining each (paper Fig 2d);
+            # blocked queues wait for a capacity-changing event (the recheck
+            # list retry is capacity-driven: within a pass capacity only
+            # shrinks, so immediate retries are provably futile)
+            while self.queues[key] and key not in self._blocked:
+                if not self._try_queue(key):
+                    break
+
+    def _try_queue(self, key: tuple[str, str]) -> bool:
+        """Dispatch from one AFW queue; returns True if a task was launched."""
+        q = self.queues[key]
+        if not q:
+            self.recheck.pop(key, None)
+            return False
+        app_name, stage = key
+        app = self.apps[app_name]
+        jobs = list(q)
+
+        t0 = _walltime.perf_counter()
+        self.sched.charged_overhead_ms = 0.0
+        candidates = self.sched.plan(self, app, stage, jobs, self.now)
+        overhead_ms = (_walltime.perf_counter() - t0) * 1e3
+        # schedulers may charge a (deterministic, pre-measured) overhead
+        # instead of re-running an identical search per instance (Orion)
+        charged = getattr(self.sched, "charged_overhead_ms", 0.0)
+        if charged:
+            overhead_ms = charged
+        self.sched_overheads_ms.append(overhead_ms)
+        # scheduling overhead delays the task being scheduled (the controller
+        # runs one proxy thread per queue — paper §4); it is charged to the
+        # dispatched task's start below, not serialised on the global clock.
+        overhead_charge = overhead_ms if self.count_overhead else 0.0
+
+        forced = self.recheck.get(key, 0) >= RECHECK_LIMIT
+        if forced:
+            # stuck in recheck: force the cheapest config (ensures progress
+            # without pinning huge models to a single accelerator)
+            tbl = self.tables[app.func_of[stage]]
+            cheapest = tbl.configs[int(np.argmin(tbl.job_costs))]
+            candidates = (candidates or []) + [cheapest, Config(1, 1, 1)]
+
+        for cfg in candidates:
+            if not self.batching:
+                cfg = Config(1, cfg.vcpu, cfg.vgpu)
+            if not self.gpu_sharing:
+                cfg = Config(cfg.batch, cfg.vcpu, self.invokers[0].vgpus)
+            miss = cfg.batch > len(jobs)
+            cfg = Config(min(cfg.batch, len(jobs)), cfg.vcpu, cfg.vgpu)
+            inv = self._place(app, stage, jobs[: cfg.batch], cfg)
+            if inv is not None:
+                if getattr(self.sched, "static_plan", False):
+                    self.plan_uses += 1
+                    self.config_misses += int(miss)
+                self._dispatch(key, jobs[: cfg.batch], cfg, inv,
+                               overhead_charge)
+                self.recheck.pop(key, None)
+                return True
+        self.recheck[key] = self.recheck.get(key, 0) + 1
+        self._blocked.add(key)
+        return False
+
+    # ---- placement ---------------------------------------------------------
+    def _place(self, app: Workflow, stage: str, jobs: list[Job],
+               cfg: Config) -> Optional[int]:
+        func = app.func_of[stage]
+        n = len(self.invokers)
+        if self.sched.placement == "fragmentation":
+            # best-fit: minimise leftover GPU after placement (INFless/FaST)
+            best, best_left = None, None
+            for inv in self.invokers:
+                if inv.fits(cfg):
+                    left = inv.free_vgpu - cfg.vgpu
+                    if best_left is None or left < best_left:
+                        best, best_left = inv.idx, left
+            return best
+        # locality policy (paper §3.4)
+        preds = app.predecessors(stage)
+        order: list[int] = []
+        if not preds:
+            order.append(hash((app.name, func)) % n)      # home invoker
+        else:
+            pred_invs = [j.inst.stage_invoker.get(p)
+                         for j in jobs for p in preds]
+            pred_invs = [p for p in pred_invs if p is not None]
+            if pred_invs:
+                vals, counts = np.unique(pred_invs, return_counts=True)
+                order.extend(int(v) for v in vals[np.argsort(-counts)])
+        for idx in order:
+            if self.invokers[idx].fits(cfg):
+                return idx
+        # other warm invokers
+        warm = [i for i in self.invokers
+                if i.has_warm(func, self.now) and i.fits(cfg)
+                and i.idx not in order]
+        if warm:
+            return max(warm, key=lambda i: (i.free_vgpu, i.free_vcpu)).idx
+        # cold invoker with most available resources
+        cold = [i for i in self.invokers if i.fits(cfg)]
+        if cold:
+            return max(cold, key=lambda i: (i.free_vgpu, i.free_vcpu)).idx
+        return None
+
+    # ---- dispatch ----------------------------------------------------------
+    def _dispatch(self, key: tuple[str, str], jobs: list[Job], cfg: Config,
+                  inv_idx: int, overhead_ms: float = 0.0):
+        app_name, stage = key
+        app = self.apps[app_name]
+        func = app.func_of[stage]
+        inv = self.invokers[inv_idx]
+        q = self.queues[key]
+        for _ in jobs:
+            q.popleft()
+
+        # data transfer: remote if any predecessor output lives elsewhere
+        transfer = 0.0
+        for job in jobs:
+            for p in app.predecessors(stage):
+                src = job.inst.stage_invoker.get(p)
+                if src is None:
+                    continue
+                if src == inv_idx:
+                    transfer = max(transfer, LOCAL_TRANSFER_MS)
+                else:
+                    self.remote_transfers += 1
+                    transfer = max(
+                        transfer, REMOTE_TRANSFER_FIXED_MS +
+                        REMOTE_TRANSFER_MS_PER_MB * self.profiles[func].input_mb)
+
+        cold = not inv.take_warm(func, self.now)
+        if cold:
+            self.cold_starts += 1
+            if self.prewarm_on:
+                # reactive scale-up: a cold start signals under-provisioned
+                # capacity — warm an extra container alongside this one
+                inv.add_warm(func, self.now + KEEPALIVE_MS)
+        cold_ms = self.profiles[func].cold_ms if cold else 0.0
+
+        noise = float(np.clip(
+            1.0 + self.rng.normal(0.0, self.noise_sigma), 0.5, 2.0))
+        exec_ms = self.profiles[func].exec_ms(cfg) * noise
+        start = self.now + overhead_ms + transfer
+        end = start + cold_ms + exec_ms
+
+        inv.alloc(cfg)
+        rate = cfg.vcpu * VCPU_PRICE_PER_H + cfg.vgpu * VGPU_PRICE_PER_H
+        cost = rate * (cold_ms + exec_ms) / 3.6e6
+        self.total_cost += cost
+        task = Task(jobs, stage, func, cfg, inv_idx, start, end, cold, cost)
+        self.tasks.append(task)
+        self.push_event(end, "complete", task)
+        self._note_prewarm(func, inv_idx)
+
+    # ---- prewarming (EWMA, paper §4) ----------------------------------------
+    def _note_prewarm(self, func: str, inv_idx: int):
+        if not self.prewarm_on:
+            return
+        prev = self.ewma.get(func)
+        if prev is not None:
+            interval, last = prev
+            obs = self.now - last
+            interval = 0.7 * interval + 0.3 * obs
+            self.ewma[func] = (interval, self.now)
+            lead = self.profiles[func].cold_ms
+            when = self.now + max(interval - lead, 0.0)
+            self.push_event(when, "prewarm", (func, inv_idx))
+        else:
+            self.ewma[func] = (1000.0, self.now)
+
+    # ---- metrics -------------------------------------------------------------
+    def slo_hit_rate(self) -> float:
+        if not self.completed:
+            return 0.0
+        hits = sum(1 for i in self.completed
+                   if i.finish_ms - i.arrival_ms <= i.slo_ms)
+        return hits / len(self.completed)
+
+    def summary(self) -> dict[str, Any]:
+        lat = np.array([i.finish_ms - i.arrival_ms for i in self.completed]) \
+            if self.completed else np.array([0.0])
+        ovh = np.array(self.sched_overheads_ms) if self.sched_overheads_ms \
+            else np.array([0.0])
+        return {
+            "scheduler": self.sched.name,
+            "completed": len(self.completed),
+            "slo_hit_rate": self.slo_hit_rate(),
+            "total_cost": self.total_cost,
+            "mean_latency_ms": float(lat.mean()),
+            "p95_latency_ms": float(np.percentile(lat, 95)),
+            "mean_sched_overhead_ms": float(ovh.mean()),
+            "p95_sched_overhead_ms": float(np.percentile(ovh, 95)),
+            "cold_starts": self.cold_starts,
+            "remote_transfers": self.remote_transfers,
+            "config_misses": self.config_misses,
+            "plan_uses": self.plan_uses,
+        }

@@ -1,0 +1,134 @@
+"""ESG_1Q — optimality-guided configuration search (paper §3.3, Alg. 1).
+
+Finds the K cheapest configuration *paths* (one config per remaining stage of
+the schedule group) whose summed latency meets the group SLO target, via
+A*-search with the paper's dual-blade pruning:
+
+  time blade:   prune prefix p when  tLow(p) >= G_SLO, where
+                tLow = time(p) + sum of per-stage minimum times not in p.
+                Config lists are sorted by latency, so the first pruned
+                config ends the whole expansion loop (the paper's `break`).
+
+  cost blade:   prune when  rscLow(p) >= minRSC[K-1], where
+                rscLow = cost(p) + sum of per-stage minimum costs not in p,
+                and minRSC holds the K best *upper bounds* seen so far —
+                each new prefix contributes rscFastest(p) = cost(p) + cost of
+                completing with every remaining stage at its fastest config
+                (that completion is time-feasible whenever p survived the
+                time blade, so the bound is achievable).
+
+The heuristic (suffix minimum cost) is admissible and consistent, so nodes
+pop in nondecreasing f = g + h order and the first K completed paths are
+exactly the K cheapest feasible ones (verified against brute force in
+tests/test_astar.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import itertools
+from typing import Optional
+
+import numpy as np
+
+from repro.core.profiles import Config, ProfileTable
+
+
+@dataclasses.dataclass(frozen=True)
+class PathResult:
+    configs: tuple[Config, ...]
+    est_time_ms: float
+    est_job_cost: float
+
+
+@dataclasses.dataclass
+class SearchStats:
+    nodes_expanded: int = 0
+    nodes_pushed: int = 0
+    pruned_time: int = 0
+    pruned_cost: int = 0
+
+
+def esg_1q(tables: list[ProfileTable], g_slo_ms: float, k: int = 5,
+           stats: Optional[SearchStats] = None) -> list[PathResult]:
+    """K cheapest SLO-feasible config paths over ``tables`` (one per stage)."""
+    n = len(tables)
+    if n == 0:
+        return []
+    # suffix bounds (suffix i = stages i..n-1)
+    min_t = np.zeros(n + 1)
+    min_c = np.zeros(n + 1)
+    fast_c = np.zeros(n + 1)
+    for i in range(n - 1, -1, -1):
+        min_t[i] = min_t[i + 1] + tables[i].min_time
+        min_c[i] = min_c[i + 1] + tables[i].min_job_cost
+        fast_c[i] = fast_c[i + 1] + tables[i].fastest_cost
+
+    if min_t[0] >= g_slo_ms:
+        # infeasible even at the fastest configs: return the fastest path
+        # (the controller treats it as a best-effort schedule)
+        cfgs = tuple(t.configs[0] for t in tables)
+        return [PathResult(cfgs, float(min_t[0]), float(fast_c[0]))]
+
+    min_rsc = [float("inf")] * k
+    results: list[PathResult] = []
+    tie = itertools.count()
+    # node: (f_cost, f_time, tie, stage_next, g_time, g_cost, path) —
+    # the admissible time bound breaks cost ties toward faster paths
+    # (matters when the cost curve is flat in resources, e.g. memory-bound
+    # LM serving where latency ~ 1/chips and $-rate ~ chips)
+    heap: list[tuple] = [(min_c[0], min_t[0], next(tie), 0, 0.0, 0.0, ())]
+
+    def note_upper(bound: float):
+        if bound < min_rsc[-1]:
+            min_rsc[-1] = bound
+            min_rsc.sort()
+
+    note_upper(float(fast_c[0]))
+
+    while heap and len(results) < k:
+        f, _, _, i, g_time, g_cost, path = heapq.heappop(heap)
+        if stats:
+            stats.nodes_expanded += 1
+        if i == n:
+            results.append(PathResult(path, g_time, g_cost))
+            continue
+        if g_cost + min_c[i] > min_rsc[-1]:     # stale node (bound tightened)
+            if stats:
+                stats.pruned_cost += 1
+            continue
+        tbl = tables[i]
+        for j in range(len(tbl.configs)):
+            t_new = g_time + float(tbl.times[j])
+            if t_new + min_t[i + 1] >= g_slo_ms:
+                if stats:
+                    stats.pruned_time += 1
+                break                            # sorted by time: all later prune
+            c_new = g_cost + float(tbl.job_costs[j])
+            rsc_low = c_new + min_c[i + 1]
+            if rsc_low > min_rsc[-1]:
+                if stats:
+                    stats.pruned_cost += 1
+                continue
+            note_upper(c_new + fast_c[i + 1])
+            heapq.heappush(heap, (rsc_low, t_new + min_t[i + 1], next(tie),
+                                  i + 1, t_new, c_new,
+                                  path + (tbl.configs[j],)))
+            if stats:
+                stats.nodes_pushed += 1
+    return results
+
+
+def brute_force(tables: list[ProfileTable], g_slo_ms: float,
+                k: int = 5) -> list[PathResult]:
+    """Reference enumeration (exponential) — test oracle + Fig 9 baseline."""
+    paths = []
+    for combo in itertools.product(*[range(len(t.configs)) for t in tables]):
+        t = sum(float(tables[i].times[j]) for i, j in enumerate(combo))
+        if t >= g_slo_ms:
+            continue
+        c = sum(float(tables[i].job_costs[j]) for i, j in enumerate(combo))
+        paths.append(PathResult(
+            tuple(tables[i].configs[j] for i, j in enumerate(combo)), t, c))
+    paths.sort(key=lambda p: (p.est_job_cost, p.est_time_ms))
+    return paths[:k]

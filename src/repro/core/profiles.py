@@ -1,0 +1,151 @@
+"""Function profiles + the configuration lattice.
+
+A *configuration* is (batch, vcpu, vgpu) — exactly the paper's 3-D space
+(§1: the space grows from m^k to (m^k)^3 with sharable GPUs).  The default
+lattice has 8 x 4 x 8 = 256 configurations per function, matching the
+paper's overhead experiments ("each function has 256 configurations").
+
+Profiles come from two sources:
+  * the paper's Table 3 (six DNN image functions) via an analytical
+    latency model calibrated to the measured minimum-config times;
+  * the TPU model zoo, where the latency model is fed by roofline terms
+    from the dry-run's ``cost_analysis`` (see repro/cluster/tpu_profiles.py).
+
+The latency model satisfies the paper's qualitative structure:
+  increasing in batch, decreasing in vcpu/vgpu, per-job time decreasing in
+  batch (throughput), per-job cost decreasing in batch — producing the
+  speed-cost tension the scheduler navigates.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Iterable
+
+import numpy as np
+
+# Pricing (paper §4.1, following AWS EC2):
+VCPU_PRICE_PER_H = 0.034
+VGPU_PRICE_PER_H = 0.67
+
+BATCHES = (1, 2, 4, 8, 16, 32, 64, 128)
+VCPUS = (1, 2, 4, 8)
+VGPUS = (1, 2, 3, 4, 5, 6, 7, 8)
+
+
+@dataclasses.dataclass(frozen=True)
+class Config:
+    batch: int
+    vcpu: int
+    vgpu: int
+
+
+@dataclasses.dataclass(frozen=True)
+class FunctionProfile:
+    """Per-function performance profile over the config lattice."""
+    name: str
+    t1_ms: float                 # exec time at (batch=1, 1 vCPU, 1 vGPU)
+    cold_ms: float               # cold-start time
+    input_mb: float              # stage input size (data-transfer model)
+    cpu_frac: float = 0.2        # fraction of t1 spent on the CPU part
+
+    def exec_ms(self, c: Config) -> float:
+        """Deterministic latency model (noise added by the emulator).
+
+        Multi-accelerator tasks both data-parallelise the batch
+        (ceil(b/g) per unit) and tensor-parallelise each inference
+        (g^-0.2 — the TPU-substrate adaptation: a pjit sub-mesh speeds up a
+        single inference, unlike MIG; see DESIGN §2).  Efficiency loss from
+        collectives is folded into the sub-linear exponents."""
+        t_serial = 0.05 * self.t1_ms                 # launch/framework floor
+        t_cpu = self.cpu_frac * self.t1_ms
+        t_gpu = (0.95 - self.cpu_frac) * self.t1_ms
+        per_gpu_batch = int(np.ceil(c.batch / c.vgpu))
+        cpu_part = t_cpu * (c.batch ** 0.2) / (c.vcpu ** 0.7)
+        gpu_part = t_gpu * (per_gpu_batch ** 0.85) * (c.vgpu ** -0.12)
+        return t_serial + cpu_part + gpu_part
+
+    def cost(self, c: Config) -> float:
+        """$ for the whole task (batch of jobs) at config c."""
+        rate = c.vcpu * VCPU_PRICE_PER_H + c.vgpu * VGPU_PRICE_PER_H
+        return rate * self.exec_ms(c) / 3.6e6
+
+    def job_cost(self, c: Config) -> float:
+        return self.cost(c) / c.batch
+
+
+# ---------------------------------------------------------------------------
+# The six paper functions (Table 3)
+# ---------------------------------------------------------------------------
+PAPER_FUNCTIONS = {
+    "super_resolution": FunctionProfile("super_resolution", 86.0, 3503.0, 2.7),
+    "segmentation": FunctionProfile("segmentation", 293.0, 16510.0, 2.5),
+    "deblur": FunctionProfile("deblur", 319.0, 22343.0, 1.1),
+    "classification": FunctionProfile("classification", 147.0, 18299.0, 0.147),
+    "background_removal": FunctionProfile("background_removal", 1047.0, 3729.0, 2.5),
+    "depth": FunctionProfile("depth", 828.0, 16479.0, 0.648),
+}
+
+
+@dataclasses.dataclass
+class ProfileTable:
+    """Profiles for one function evaluated over the lattice, sorted by time."""
+    fn: FunctionProfile
+    configs: list[Config]
+    times: np.ndarray            # ms, same order as configs
+    job_costs: np.ndarray        # $ per job
+
+    @classmethod
+    def build(cls, fn: FunctionProfile,
+              batches: Iterable[int] = BATCHES,
+              vcpus: Iterable[int] = VCPUS,
+              vgpus: Iterable[int] = VGPUS,
+              max_batch: int | None = None) -> "ProfileTable":
+        cfgs = [Config(b, c, g)
+                for b, c, g in itertools.product(batches, vcpus, vgpus)
+                if max_batch is None or b <= max_batch]
+        times = np.array([fn.exec_ms(c) for c in cfgs])
+        costs = np.array([fn.job_cost(c) for c in cfgs])
+        order = np.argsort(times, kind="stable")
+        return cls(fn,
+                   [cfgs[i] for i in order],
+                   times[order],
+                   costs[order])
+
+    def restrict_batch(self, max_batch: int) -> "ProfileTable":
+        keep = [i for i, c in enumerate(self.configs) if c.batch <= max_batch]
+        return ProfileTable(self.fn,
+                            [self.configs[i] for i in keep],
+                            self.times[keep], self.job_costs[keep])
+
+    def pareto(self) -> "ProfileTable":
+        """(time, job_cost)-Pareto-optimal configs only.
+
+        Beyond-paper optimisation: a dominated config can never appear in the
+        cheapest feasible path (swap it for its dominator), so top-1 quality
+        is preserved; ranks 2..K may differ (tests cover both modes)."""
+        best = np.inf
+        keep = []
+        for i in range(len(self.configs)):      # already sorted by time
+            if self.job_costs[i] < best - 1e-18:
+                best = self.job_costs[i]
+                keep.append(i)
+        return ProfileTable(self.fn,
+                            [self.configs[i] for i in keep],
+                            self.times[keep], self.job_costs[keep])
+
+    @property
+    def min_time(self) -> float:
+        return float(self.times[0])
+
+    @property
+    def min_job_cost(self) -> float:
+        return float(self.job_costs.min())
+
+    @property
+    def fastest_cost(self) -> float:
+        """Job cost when running the fastest config (for rscFastest)."""
+        return float(self.job_costs[0])
+
+    def mean_time(self) -> float:
+        return float(self.times.mean())

@@ -1,0 +1,104 @@
+"""The ESG scheduling policy — the paper's contribution, wired together.
+
+Per queue-scheduling call (paper Fig 2(d)):
+  1. locate the stage's schedule group + SLO quota (dominator-based
+     distribution, computed once per app),
+  2. G_SLO = (deadline - now) x q̂, with q̂ the group quota normalised over
+     the not-yet-finished groups (the paper's (SLO - w) x q with the quota
+     re-normalised so early finishes benefit later stages; see DESIGN §1),
+  3. ESG_1Q (A* + dual-blade pruning) over the remaining stages of the
+     group, the current stage's batch capped by the queue length,
+  4. return the top-K *current-stage* configs as the configuration priority
+     queue — the emulator's dispatcher walks it (ESG_Dispatch), falling back
+     through candidates, then to the recheck list.
+
+ESG re-plans at *every* stage dispatch — the paper's optimality-guided
+adaptive behaviour (vs Orion/Aquatope's static whole-workflow plans).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+from repro.core.astar import esg_1q
+from repro.core.dominator import ScheduleGroup, distribute_slo
+from repro.core.profiles import Config, ProfileTable
+from repro.core.workflows import Workflow
+from repro.cluster.emulator import ClusterSim, Job, SchedulerPolicy
+
+
+class ESGScheduler(SchedulerPolicy):
+    name = "ESG"
+    placement = "locality"
+
+    def __init__(self, apps: dict[str, Workflow],
+                 tables: dict[str, ProfileTable],
+                 k: int = 5, group_size: int = 3,
+                 pareto: bool = False, risk_sigma: float = 0.0):
+        self.tables = tables
+        self.k = k
+        self.pareto = pareto
+        # plan against P95-ish estimates when the config lattice is coarse
+        # (TPU-zoo serving: chip counts step latency ~2x, so mean-based
+        # plans ride the budget edge and noise tips them over)
+        self.time_inflation = 1.0 + 1.645 * risk_sigma
+        self.groups: dict[str, dict[str, ScheduleGroup]] = {
+            name: distribute_slo(app, tables, group_size)
+            for name, app in apps.items()
+        }
+        # per-app stage order (topological) for suffix-quota normalisation
+        self._stage_pos = {
+            name: {s: i for i, s in enumerate(app.stages)}
+            for name, app in apps.items()
+        }
+
+    # -- quota of the remaining pipeline, for G_SLO normalisation ----------
+    def _norm_quota(self, app: Workflow, group: ScheduleGroup,
+                    stage: str) -> float:
+        gmap = self.groups[app.name]
+        pos = self._stage_pos[app.name]
+        remaining_groups = {gmap[s].stages: gmap[s].slo_fraction
+                            for s in app.stages if pos[s] >= pos[stage]}
+        total = sum(remaining_groups.values())
+        return group.slo_fraction / total if total > 0 else 1.0
+
+    def plan(self, sim: ClusterSim, app: Workflow, stage: str,
+             jobs: list[Job], now: float) -> list[Config]:
+        group = self.groups[app.name][stage]
+        # stages of the group from the current one onward
+        idx = group.stages.index(stage)
+        stages = group.stages[idx:]
+        funcs = [app.func_of[s] for s in stages]
+        tables = [self.tables[f] for f in funcs]
+        if self.pareto:
+            tables = [t.pareto() for t in tables]
+        tables[0] = tables[0].restrict_batch(max(len(jobs), 1))
+
+        w = max(now - j.inst.arrival_ms for j in jobs)
+        slo = max(j.inst.slo_ms for j in jobs)
+        if w >= slo:
+            # deadline already lost: the SLO miss is sunk — serve at the
+            # globally cost-optimal config (paper's "ensure progress";
+            # Config(1,1,1) would pin a 76B model to one chip for minutes)
+            tbl = self.tables[funcs[0]].restrict_batch(max(len(jobs), 1))
+            i = int(np.argmin(tbl.job_costs))
+            return [tbl.configs[i]]
+        remaining = max(slo - w, 1.0)
+        g_slo = remaining * self._norm_quota(app, group, stage)
+        # headroom for non-exec latency the profiles don't cover: data
+        # transfer + dispatch/scheduling overhead per remaining stage (the
+        # Controller "estimates the times with performance profiles" — §3.3;
+        # transfer estimates are part of those profiles)
+        margin = sum(self.tables[f].fn.input_mb * 8.0 + 25.0 for f in funcs)
+        g_slo = max((g_slo - margin) / self.time_inflation, 1.0)
+
+        results = esg_1q(tables, g_slo, k=self.k)
+        out = [r.configs[0] for r in results]
+        if len(out) == 1 and results[0].est_time_ms >= g_slo:
+            # infeasible target: best-effort fastest path, with cheaper
+            # fallbacks so the dispatcher can still place something
+            out.append(Config(min(len(jobs), 8), 2, 2))
+            out.append(Config(1, 1, 1))
+        return out

@@ -1,0 +1,66 @@
+"""Deterministic synthetic-token data pipeline.
+
+Batches are a pure function of (seed, step, host_slice), so training is
+exactly replayable after a checkpoint restart and each host materialises
+only its slice of the global batch — no data redistribution on restore,
+and an elastic rescale just changes the slicing (same global stream).
+
+The token stream is a mixture of Zipfian unigrams and short repeated
+motifs, so small models have actual structure to learn in the examples
+(loss drops well below the uniform-entropy floor).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class DataConfig:
+    vocab: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    zipf_a: float = 1.2
+    motif_len: int = 8
+    motif_prob: float = 0.5
+
+
+def _zipf_logits(cfg: DataConfig) -> np.ndarray:
+    ranks = np.arange(1, cfg.vocab + 1, dtype=np.float64)
+    p = 1.0 / ranks ** cfg.zipf_a
+    return np.log(p / p.sum()).astype(np.float32)
+
+
+class TokenStream:
+    """Stateless batch factory: ``batch(step)`` is deterministic."""
+
+    def __init__(self, cfg: DataConfig):
+        self.cfg = cfg
+        self._logits = jnp.asarray(_zipf_logits(cfg))
+
+    def batch(self, step: int, host_slice: slice | None = None) -> dict:
+        cfg = self.cfg
+        key = jax.random.fold_in(jax.random.PRNGKey(cfg.seed), step)
+        b = cfg.global_batch
+        k1, k2, k3 = jax.random.split(key, 3)
+        toks = jax.random.categorical(
+            k1, self._logits, shape=(b, cfg.seq_len + 1))
+        # overwrite random spans with repeated motifs (learnable structure)
+        motif = jax.random.randint(
+            k2, (b, cfg.motif_len), 0, cfg.vocab, jnp.int32)
+        reps = (cfg.seq_len + 1 + cfg.motif_len - 1) // cfg.motif_len
+        tiled = jnp.tile(motif, (1, reps))[:, : cfg.seq_len + 1]
+        use_motif = jax.random.bernoulli(
+            k3, cfg.motif_prob, (b, 1))
+        toks = jnp.where(use_motif, tiled, toks).astype(jnp.int32)
+        if host_slice is not None:
+            toks = toks[host_slice]
+        return {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+
+    def host_slice(self, host_id: int, n_hosts: int) -> slice:
+        per = self.cfg.global_batch // n_hosts
+        return slice(host_id * per, (host_id + 1) * per)

@@ -1,0 +1,126 @@
+"""Flash-attention (forward) Pallas TPU kernel.
+
+Grid: (batch, q_heads, num_q_blocks, num_kv_blocks) — the kv dim iterates
+innermost so the online-softmax state (m, l, acc) lives in VMEM scratch and
+carries across kv blocks.  GQA is handled in the k/v index_maps (q head h
+reads kv head h // n_rep).  Causal / sliding-window / chunked-local masks
+are applied per block; fully-masked blocks skip their matmuls via
+``pl.when``.
+
+Block sizes default to (128, 128): MXU-aligned (lane = 128) with the fp32
+scratch well inside VMEM: acc 128xD x4B + q/k/v blocks ~= a few hundred KiB.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _fa_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+               scale: float, causal: bool, window, local_block,
+               q_offset: int, block_q: int, block_k: int, kv_len: int):
+    qb = pl.program_id(2)
+    kb = pl.program_id(3)
+    n_kv = pl.num_programs(3)
+
+    @pl.when(kb == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q_pos = q_offset + qb * block_q + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_k), 0)
+    kv_pos = kb * block_k + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_k), 1)
+
+    # block-level reachability: skip matmuls of fully-masked tiles
+    run = jnp.asarray(True)
+    mask = kv_pos < kv_len
+    if causal:
+        run &= q_offset + (qb + 1) * block_q - 1 >= kb * block_k
+        mask &= q_pos >= kv_pos
+    if window is not None:
+        run &= q_offset + qb * block_q < (kb + 1) * block_k + window
+        mask &= q_pos - kv_pos < window
+    if local_block is not None:
+        run &= ((q_offset + (qb + 1) * block_q - 1) // local_block
+                >= (kb * block_k) // local_block)
+        run &= ((q_offset + qb * block_q) // local_block
+                <= ((kb + 1) * block_k - 1) // local_block)
+        mask &= (q_pos // local_block) == (kv_pos // local_block)
+
+    @pl.when(run)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32) * scale         # (bq, d)
+        k = k_ref[0, 0].astype(jnp.float32)                 # (bk, d)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * alpha + p.sum(axis=1)
+        v = v_ref[0, 0].astype(jnp.float32)                 # (bk, d)
+        # zero the tail padding: 0 x garbage = NaN otherwise
+        kv_valid = (kb * block_k + jax.lax.broadcasted_iota(
+            jnp.int32, (block_k, 1), 0)) < kv_len
+        v = jnp.where(kv_valid, v, 0.0)
+        pv = jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + pv
+        m_ref[...] = m_new
+
+    @pl.when(kb == n_kv - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention_fwd(q, k, v, *, causal=True, window=None,
+                        local_block=None, q_offset=0,
+                        block_q=128, block_k=128, interpret=False):
+    """q: (B, H, Sq, D); k/v: (B, KV, Skv, D).  Returns (B, H, Sq, D)."""
+    b, h, sq, d = q.shape
+    kvh, skv = k.shape[1], k.shape[2]
+    n_rep = h // kvh
+    block_q = min(block_q, sq)
+    block_k = min(block_k, skv)
+    nq = pl.cdiv(sq, block_q)
+    nk = pl.cdiv(skv, block_k)
+    scale = 1.0 / np.sqrt(d)
+
+    kernel = functools.partial(
+        _fa_kernel, scale=scale, causal=causal, window=window,
+        local_block=local_block, q_offset=q_offset,
+        block_q=block_q, block_k=block_k, kv_len=skv)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(b, h, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, d),
+                         lambda b_, h_, i, j: (b_, h_, i, 0)),
+            pl.BlockSpec((1, 1, block_k, d),
+                         lambda b_, h_, i, j: (b_, h_ // n_rep, j, 0)),
+            pl.BlockSpec((1, 1, block_k, d),
+                         lambda b_, h_, i, j: (b_, h_ // n_rep, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, d),
+                               lambda b_, h_, i, j: (b_, h_, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, d), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,41 @@
+"""Jitted wrapper: model-layout adapter + CPU interpret fallback.
+
+The model passes (B, S, H, D) activations; the kernel wants heads-major.
+On non-TPU backends the kernel body runs under ``interpret=True`` (Python
+emulation — correctness only).  ``use_kernel=False`` falls back to the
+oracle entirely.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.flash_attention import flash_attention_fwd
+from repro.kernels.flash_attention.ref import attention_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window",
+                                             "local_block", "q_offset"))
+def flash_attention(q, k, v, *, causal=True, window=None, local_block=None,
+                    q_offset=0):
+    """q: (B, S, H, D); k/v: (B, S, KV, D) -> (B, S, H, D)."""
+    qT = jnp.swapaxes(q, 1, 2)
+    kT = jnp.swapaxes(k, 1, 2)
+    vT = jnp.swapaxes(v, 1, 2)
+    out = flash_attention_fwd(qT, kT, vT, causal=causal, window=window,
+                              local_block=local_block, q_offset=q_offset,
+                              interpret=not _on_tpu())
+    return jnp.swapaxes(out, 1, 2)
+
+
+def flash_attention_oracle(q, k, v, **kw):
+    qT = jnp.swapaxes(q, 1, 2)
+    kT = jnp.swapaxes(k, 1, 2)
+    vT = jnp.swapaxes(v, 1, 2)
+    return jnp.swapaxes(attention_ref(qT, kT, vT, **kw), 1, 2)

@@ -1,0 +1,33 @@
+"""Pure-jnp oracle for the flash-attention kernel (naive materialised)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+NEG_INF = -1e30
+
+
+def attention_ref(q, k, v, *, causal=True, window=None, local_block=None,
+                  q_offset=0):
+    """q: (B, H, Sq, D); k/v: (B, KV, Skv, D).  fp32 softmax, full scores."""
+    b, h, sq, d = q.shape
+    kvh, skv = k.shape[1], k.shape[2]
+    n_rep = h // kvh
+    k = jnp.repeat(k, n_rep, axis=1)
+    v = jnp.repeat(v, n_rep, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / np.sqrt(d)
+    q_pos = q_offset + jnp.arange(sq)
+    kv_pos = jnp.arange(skv)
+    mask = jnp.ones((sq, skv), bool)
+    if causal:
+        mask &= q_pos[:, None] >= kv_pos[None, :]
+    if window is not None:
+        mask &= q_pos[:, None] - kv_pos[None, :] < window
+    if local_block is not None:
+        mask &= (q_pos[:, None] // local_block) == (kv_pos[None, :] // local_block)
+    s = jnp.where(mask[None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)

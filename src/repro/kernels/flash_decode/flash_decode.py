@@ -1,0 +1,112 @@
+"""Flash-decoding Pallas TPU kernel: one query token vs a long KV cache.
+
+Grid: (batch, num_kv_blocks) — the kv dim iterates innermost (split-K over
+the context); all query heads are processed together per block (decode is
+HBM-bandwidth-bound: each cache byte is read exactly once).  Online-softmax
+state (m, l, acc) sits in VMEM scratch, sized (H, D) — e.g. 64 heads x 128
+x 4 B = 32 KiB.
+
+Ring-cache masking (sliding-window / chunked-local) is supported via the
+absolute-position reconstruction  p_i = t - ((t - i) mod W)  used by the
+jnp path (`layers.decode_ring_attention`).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _fd_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+               scale: float, t: int, window, local_block,
+               block_k: int, kv_len: int, n_rep: int):
+    kb = pl.program_id(1)
+    n_kv = pl.num_programs(1)
+
+    @pl.when(kb == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0].astype(jnp.float32) * scale            # (H, D)
+    k = k_ref[0].astype(jnp.float32)                    # (bk, KV, D)
+    v = v_ref[0].astype(jnp.float32)
+
+    slots = kb * block_k + jax.lax.broadcasted_iota(
+        jnp.int32, (block_k,), 0)
+    if window is None and local_block is None:
+        kv_pos = slots                                  # linear cache
+        valid = kv_pos <= t
+    else:
+        w = kv_len
+        kv_pos = t - ((t - slots) % w)                  # ring cache
+        valid = kv_pos >= 0
+        if window is not None:
+            valid &= (t - kv_pos) < window
+        if local_block is not None:
+            valid &= kv_pos >= (t // local_block) * local_block
+    valid &= slots < kv_len
+
+    # scores: (H, bk) — q head h reads kv head h // n_rep
+    k2 = jnp.repeat(k, n_rep, axis=1) if n_rep > 1 else k   # (bk, H, D)
+    v2 = jnp.repeat(v, n_rep, axis=1) if n_rep > 1 else v
+    sc = jnp.einsum("hd,khd->hk", q, k2,
+                    preferred_element_type=jnp.float32)          # (H, bk)
+    sc = jnp.where(valid[None, :], sc, NEG_INF)
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, sc.max(axis=1))
+    p = jnp.exp(sc - m_new[:, None])
+    alpha = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * alpha + p.sum(axis=1)
+    v2 = jnp.where(valid[:, None, None], v2, 0.0)
+    pv = jnp.einsum("hk,khd->hd", p, v2,
+                    preferred_element_type=jnp.float32)
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + pv
+    m_ref[...] = m_new
+
+    @pl.when(kb == n_kv - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def flash_decode(q, k_cache, v_cache, *, t, window=None, local_block=None,
+                 block_k=512, interpret=False):
+    """q: (B, H, D); caches: (B, S, KV, D); t: python int (current position).
+
+    Returns (B, H, D)."""
+    b, h, d = q.shape
+    s, kvh = k_cache.shape[1], k_cache.shape[2]
+    n_rep = h // kvh
+    block_k = min(block_k, s)
+    nk = pl.cdiv(s, block_k)
+    scale = 1.0 / np.sqrt(d)
+
+    kernel = functools.partial(
+        _fd_kernel, scale=scale, t=t, window=window, local_block=local_block,
+        block_k=block_k, kv_len=s, n_rep=n_rep)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(b, nk),
+        in_specs=[
+            pl.BlockSpec((1, h, d), lambda b_, j: (b_, 0, 0)),
+            pl.BlockSpec((1, block_k, kvh, d), lambda b_, j: (b_, j, 0, 0)),
+            pl.BlockSpec((1, block_k, kvh, d), lambda b_, j: (b_, j, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, h, d), lambda b_, j: (b_, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((h, d), jnp.float32),
+            pltpu.VMEM((h,), jnp.float32),
+            pltpu.VMEM((h,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k_cache, v_cache)

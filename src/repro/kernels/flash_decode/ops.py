@@ -1,0 +1,22 @@
+"""Jitted wrapper for flash_decode (interpret on non-TPU backends)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.flash_decode.flash_decode import flash_decode as _kernel
+from repro.kernels.flash_decode.ref import decode_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("t", "window", "local_block", "block_k"))
+def flash_decode(q, k_cache, v_cache, *, t, window=None, local_block=None,
+                 block_k=512):
+    return _kernel(q, k_cache, v_cache, t=t, window=window,
+                   local_block=local_block, block_k=block_k,
+                   interpret=not _on_tpu())

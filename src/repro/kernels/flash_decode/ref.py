@@ -1,0 +1,34 @@
+"""Pure-jnp oracle for flash_decode."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+NEG_INF = -1e30
+
+
+def decode_ref(q, k_cache, v_cache, *, t, window=None, local_block=None):
+    """q: (B, H, D); caches: (B, S, KV, D) -> (B, H, D)."""
+    b, h, d = q.shape
+    s, kvh = k_cache.shape[1], k_cache.shape[2]
+    n_rep = h // kvh
+    k = jnp.repeat(k_cache, n_rep, axis=2)
+    v = jnp.repeat(v_cache, n_rep, axis=2)
+    sc = jnp.einsum("bhd,bkhd->bhk", q.astype(jnp.float32),
+                    k.astype(jnp.float32)) / np.sqrt(d)
+    slots = jnp.arange(s)
+    if window is None and local_block is None:
+        kv_pos = slots
+        valid = kv_pos <= t
+    else:
+        kv_pos = t - ((t - slots) % s)
+        valid = kv_pos >= 0
+        if window is not None:
+            valid &= (t - kv_pos) < window
+        if local_block is not None:
+            valid &= kv_pos >= (t // local_block) * local_block
+    sc = jnp.where(valid[None, None, :], sc, NEG_INF)
+    p = jax.nn.softmax(sc, axis=-1)
+    out = jnp.einsum("bhk,bkhd->bhd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)

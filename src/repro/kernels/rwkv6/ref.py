@@ -1,0 +1,28 @@
+"""Sequential-oracle for the WKV6 kernel (literal per-token recurrence)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def wkv6_ref(r, k, v, lw, u, s0):
+    """r/k/v/lw: (B, H, T, K); u: (H, K); s0: (B, H, K, V) f32.
+
+    Token-by-token recurrence — slow but unambiguous."""
+    r = r.astype(jnp.float32)
+    k = k.astype(jnp.float32)
+    v = v.astype(jnp.float32)
+    w = jnp.exp(lw.astype(jnp.float32))          # per-step decay in (0, 1]
+    u = u.astype(jnp.float32)
+
+    def step(s, inp):
+        rt, kt, vt, wt = inp                     # (B, H, K) each
+        kv = kt[..., :, None] * vt[..., None, :]                 # (B,H,K,V)
+        y = jnp.einsum("bhk,bhkv->bhv", rt, s + u[None, :, :, None] * kv)
+        s = s * wt[..., None] + kv
+        return s, y
+
+    xs = tuple(jnp.moveaxis(a, 2, 0) for a in (r, k, v, w))
+    s_fin, ys = jax.lax.scan(step, s0, xs)
+    y = jnp.moveaxis(ys, 0, 2)                   # (B, H, T, V)
+    return y.astype(r.dtype), s_fin

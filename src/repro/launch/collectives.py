@@ -1,0 +1,148 @@
+"""Optimized-HLO collective parser.
+
+``compiled.as_text()`` is an SPMD (per-device) module.  We extract every
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute,
+attribute it to its computation, and walk the call graph from ENTRY through
+``while`` bodies using XLA's ``known_trip_count`` backend_config so that
+collectives inside the layer scan (and nested chunk scans) are multiplied by
+their true execution counts.
+
+Wire-byte model (per device, bidirectional ring):
+  all-reduce        2 (S-1)/S x bytes(result)
+  all-gather        (S-1)/S x bytes(result)
+  reduce-scatter    (S-1)   x bytes(result)      (= (S-1)/S x operand)
+  all-to-all        (S-1)/S x bytes(result)
+  collective-permute  1.0   x bytes(result)
+where S = participating group size from replica_groups.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+import numpy as np
+
+DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+COLL_RE = re.compile(
+    r"=\s*(?:\()?([a-z0-9_\[\]{},\s]*?)?"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+TRIP_RE = re.compile(r'known_trip_count[^\d]*(\d+)')
+WHILE_RE = re.compile(r"=.*\bwhile\(.*body=%([\w.\-]+)")
+COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)[\s(].*\{$")
+
+WIRE_FACTOR = {
+    "all-reduce": lambda s: 2.0 * (s - 1) / s,
+    "all-gather": lambda s: (s - 1) / s,
+    "reduce-scatter": lambda s: float(s - 1),
+    "all-to-all": lambda s: (s - 1) / s,
+    "collective-permute": lambda s: 1.0,
+}
+
+
+@dataclasses.dataclass
+class Collective:
+    op: str
+    bytes_result: float
+    group_size: int
+    count: float = 1.0
+
+    @property
+    def wire_bytes(self) -> float:
+        return WIRE_FACTOR[self.op](max(self.group_size, 2)) \
+            * self.bytes_result * self.count
+
+
+def _result_bytes(line: str) -> float:
+    """Sum byte sizes of all result shapes on the line (tuples included)."""
+    lhs = line.split(" = ", 1)[1] if " = " in line else line
+    head = lhs.split("(", 1)[0]
+    total = 0.0
+    for dt, dims in SHAPE_RE.findall(head):
+        if dt not in DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str, n_devices: int) -> int:
+    m = GROUPS_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = GROUPS_LIST_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return n_devices
+
+
+def parse_collectives(hlo_text: str, n_devices: int) -> dict:
+    """Returns {'total_wire_bytes', 'by_op', 'items'} for one SPMD program."""
+    # 1. split into computations
+    comps: dict[str, list[str]] = {}
+    entry = None
+    cur = None
+    for raw in hlo_text.splitlines():
+        line = raw.rstrip()
+        if not line.startswith(" "):
+            m = COMP_RE.match(line.strip())
+            if m and line.strip().endswith("{"):
+                cur = m.group(1)
+                comps[cur] = []
+                if line.strip().startswith("ENTRY"):
+                    entry = cur
+            continue
+        if cur is not None:
+            comps[cur].append(line.strip())
+
+    # 2. per computation: collectives + nested whiles
+    colls: dict[str, list[Collective]] = defaultdict(list)
+    whiles: dict[str, list[tuple[str, float]]] = defaultdict(list)
+    for name, lines in comps.items():
+        for line in lines:
+            if line.split(" = ")[0].strip().startswith("%") or " = " in line:
+                cm = COLL_RE.search(line)
+                if cm and "-done" not in line.split("(")[0]:
+                    op = cm.group(2)
+                    colls[name].append(Collective(
+                        op, _result_bytes(line), _group_size(line, n_devices)))
+                wm = WHILE_RE.search(line)
+                if wm:
+                    tm = TRIP_RE.search(line)
+                    trip = float(tm.group(1)) if tm else 1.0
+                    whiles[name].append((wm.group(1), trip))
+
+    # 3. DFS from entry, multiplying trip counts
+    out: list[Collective] = []
+
+    def visit(comp: str, mult: float, depth: int = 0):
+        if depth > 16:
+            return
+        for c in colls.get(comp, []):
+            out.append(Collective(c.op, c.bytes_result, c.group_size, mult))
+        for body, trip in whiles.get(comp, []):
+            visit(body, mult * trip, depth + 1)
+
+    if entry:
+        visit(entry, 1.0)
+
+    by_op: dict[str, float] = defaultdict(float)
+    for c in out:
+        by_op[c.op] += c.wire_bytes
+    return {
+        "total_wire_bytes": float(sum(c.wire_bytes for c in out)),
+        "by_op": dict(by_op),
+        "n_collectives": len(out),
+        "items": [(c.op, c.bytes_result, c.group_size, c.count) for c in out],
+    }

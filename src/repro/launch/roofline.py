@@ -1,0 +1,154 @@
+"""Roofline accounting from compiled dry-run artifacts (TPU v5e targets).
+
+  compute term    = HLO_FLOPs_per_device / peak_FLOPs
+  memory term     = HLO_bytes_per_device / HBM_bw
+  collective term = wire_bytes_per_device / link_bw
+
+``compiled.cost_analysis()`` reports per-device numbers (verified: an
+8-device sharded matmul reports ~global/8), so no further division by chips.
+MODEL_FLOPS uses active parameters for MoE.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+PEAK_FLOPS = 197e12        # bf16 / chip
+HBM_BW = 819e9             # B/s / chip
+ICI_BW = 50e9              # B/s / link (effective per-chip collective bw)
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    flops_per_device: float
+    bytes_per_device: float
+    wire_bytes_per_device: float
+    model_flops: float
+    useful_ratio: float          # MODEL_FLOPS / (per-device flops x chips)
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_s(self) -> float:
+        """Lower-bound step time = max of the three terms."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """How close the *achievable* step is to the compute roofline:
+        compute_s / max-term.  1.0 = perfectly compute-bound."""
+        return self.compute_s / self.bound_s if self.bound_s > 0 else 0.0
+
+    def to_dict(self) -> dict[str, Any]:
+        return {
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "dominant": self.dominant,
+            "bound_s": self.bound_s,
+            "roofline_fraction": self.roofline_fraction,
+            "flops_per_device": self.flops_per_device,
+            "bytes_per_device": self.bytes_per_device,
+            "wire_bytes_per_device": self.wire_bytes_per_device,
+            "model_flops": self.model_flops,
+            "useful_ratio": self.useful_ratio,
+        }
+
+
+def analytic_memory_bytes(cfg, shape, n_chips: int) -> float:
+    """Per-device HBM traffic estimate from model arithmetic.
+
+    The HLO-parsed byte count (kept in the JSONs as ``bytes_hlo_upper``) is
+    an *unfused* upper bound: the CPU backend barely fuses and charges
+    nested-loop fusion operands conservatively, inflating the term 10-30x
+    vs a TPU executable.  The roofline memory term therefore uses this
+    transparent napkin model (kernel-resident intermediates — flash
+    attention tiles, WKV pair tensors — count as VMEM, not HBM, matching
+    the Pallas execution path):
+
+    train:   params 2B read (fwd) + 2B (bwd) + grads 2B write
+             + AdamW m/v read+write fp32 (16B) + param write 2B  = 24 B/param
+             + activations: ~10 residual-width passes + mlp/attn projections,
+             x (fwd + bwd + remat fwd) = x3
+    prefill: params 2B + 1x activation pass + cache write
+    decode:  params 2B + cache read/write + O(B*D) activations
+    """
+    p_local = cfg.n_params / n_chips
+    d, f_, l = cfg.d_model, cfg.d_ff, cfg.n_layers
+    act = 2  # bf16
+    if shape.kind == "train":
+        b_loc = max(shape.global_batch / n_chips * 16, 1)  # dp only: B/dp
+        toks = b_loc * shape.seq_len
+        per_layer = (10 * d + 3 * min(f_, f_ * (cfg.top_k if cfg.n_experts
+                                                else 1)) / 16 +
+                     3 * cfg.n_heads * cfg.d_head / 16) * act
+        act_bytes = toks * per_layer * l * 3.0
+        return p_local * 24.0 + act_bytes
+    if shape.kind == "prefill":
+        b_loc = max(shape.global_batch / min(n_chips, 16), 1)
+        toks = b_loc * shape.seq_len
+        per_layer = (8 * d + 3 * (f_ if not cfg.n_experts else
+                                  f_ * cfg.top_k) / 16 +
+                     4 * cfg.n_kv_heads * cfg.d_head) * act
+        cache = toks * 2 * cfg.n_kv_heads * cfg.d_head * act * l
+        return p_local * 2.0 + toks * per_layer * l + cache / n_chips * 16
+    # decode: weights + cache dominate
+    cache_local = _cache_bytes(cfg, shape) / n_chips
+    b = shape.global_batch
+    act_bytes = b * d * l * 8 * act / min(n_chips, 16)
+    return p_local * 2.0 + cache_local + act_bytes
+
+
+def _cache_bytes(cfg, shape) -> float:
+    l, kvh, dh = cfg.n_layers, cfg.n_kv_heads, cfg.d_head
+    b, s = shape.global_batch, shape.seq_len
+    if cfg.family == "ssm":
+        return b * cfg.n_heads * cfg.d_head * cfg.d_head * 4 * l
+    w = s
+    if cfg.window:
+        w = min(cfg.window, s)
+    if cfg.chunk_attn and cfg.global_every:
+        per_macro = (cfg.global_every - 1) * min(cfg.chunk_attn, s) + s
+        return b * per_macro * kvh * dh * 2 * 2 * (l // cfg.global_every)
+    extra = 0.0
+    if cfg.family == "hybrid":
+        extra = b * cfg.d_model * cfg.ssm_state * 4 * l
+    return b * w * kvh * dh * 2 * 2 * l + extra
+
+
+def model_flops(cfg, shape) -> float:
+    """6 N D (train) / 2 N D (fwd) with N = active params."""
+    n = cfg.n_active_params
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    tokens = shape.global_batch            # one token per sequence
+    return 2.0 * n * tokens
+
+
+def roofline(cfg, shape, flops_per_device: float, bytes_hlo_upper: float,
+             wire_bytes_per_device: float, n_chips: int) -> RooflineTerms:
+    mf = model_flops(cfg, shape)
+    mem_bytes = min(analytic_memory_bytes(cfg, shape, n_chips),
+                    bytes_hlo_upper if bytes_hlo_upper > 0 else float("inf"))
+    return RooflineTerms(
+        compute_s=flops_per_device / PEAK_FLOPS,
+        memory_s=mem_bytes / HBM_BW,
+        collective_s=wire_bytes_per_device / ICI_BW,
+        flops_per_device=flops_per_device,
+        bytes_per_device=mem_bytes,
+        wire_bytes_per_device=wire_bytes_per_device,
+        model_flops=mf,
+        useful_ratio=mf / (flops_per_device * n_chips)
+        if flops_per_device else 0.0,
+    )

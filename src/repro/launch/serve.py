@@ -1,0 +1,164 @@
+"""Serving launcher: ESG scheduling over the model zoo.
+
+Two modes:
+
+  * ``--emulate`` (default): the paper's controller (ESG or a baseline)
+    schedules LM-pipeline workflows onto the emulated 16-host TPU cluster,
+    with per-arch latency profiles from the v5e roofline model
+    (cluster/tpu_profiles).  This is the "assigned architectures as
+    servable functions" configuration.
+
+  * ``--real``: actually serves a *reduced* model on this host: requests
+    arrive on an AFW queue, ESG_1Q picks the batch size from the profile
+    lattice, and real JAX prefill+decode steps run per dispatched batch.
+    End-to-end driver for examples/quickstart.py.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.cluster.emulator import ClusterSim
+from repro.cluster.tpu_profiles import ServingSpec, TPUFunctionProfile, zoo_tables
+from repro.cluster.workload import generate, min_config_latency
+from repro.configs.registry import ARCH_IDS, ShapeSpec, get_config, reduced
+from repro.core.profiles import Config, ProfileTable
+from repro.core.scheduler import ESGScheduler
+from repro.core.workflows import Workflow
+from repro.models.model import RunOptions, get_model
+
+# LM pipelines over the assigned architectures (DAG stage = one model)
+ZOO_APPS = {
+    "draft_verify": Workflow.pipeline(
+        "draft_verify", ["rwkv6_1_6b", "internlm2_20b"]),
+    "vlm_caption": Workflow.pipeline(
+        "vlm_caption", ["internvl2_76b", "internlm2_1_8b"]),
+    "code_review": Workflow.pipeline(
+        "code_review", ["starcoder2_7b", "mixtral_8x22b"]),
+    "music_tagging": Workflow.pipeline(
+        "music_tagging", ["musicgen_medium", "hymba_1_5b",
+                          "internlm2_1_8b"]),
+}
+
+
+def emulate(setting: str = "moderate-normal", n: int = 200, seed: int = 0,
+            scheduler: str = "esg", log=print) -> dict:
+    tables = zoo_tables()
+    profiles = {a: t.fn for a, t in tables.items()}
+    if scheduler == "esg":
+        sched = ESGScheduler(ZOO_APPS, tables, risk_sigma=0.05)
+    else:
+        from repro.core.baselines.infless import INFlessScheduler
+        sched = INFlessScheduler(ZOO_APPS, tables)
+    sim = ClusterSim(ZOO_APPS, tables, profiles, sched, seed=seed)
+    generate(sim, setting, n, profiles, seed=seed + 1)
+    sim.run()
+    s = sim.summary()
+    log(f"[serve-emulate] {s['scheduler']}: hit={s['slo_hit_rate']:.3f} "
+        f"cost=${s['total_cost']:.4f} mean_lat={s['mean_latency_ms']:.0f}ms "
+        f"sched_ovh={s['mean_sched_overhead_ms']:.2f}ms")
+    return s
+
+
+def serve_real(arch: str = "internlm2_1_8b", n_requests: int = 48,
+               slo_ms: float = 4000.0, mean_interval_ms: float = 50.0,
+               gen_len: int = 8, prompt_len: int = 32, seed: int = 0,
+               log=print) -> dict:
+    """Serve a reduced model with ESG-batched requests (real compute)."""
+    from repro.core.astar import esg_1q
+
+    cfg = reduced(get_config(arch))
+    opts = RunOptions(remat="none", attn_chunk=64,
+                      param_dtype=jnp.float32, act_dtype=jnp.float32)
+    model = get_model(cfg, opts)
+    params = model.init(jax.random.PRNGKey(seed))
+
+    # profile lattice: measure real batch latencies once (the "profiles")
+    lat = {}
+    rng = np.random.default_rng(seed)
+    batches = (1, 2, 4, 8, 16)
+
+    def run_batch_params(bs: int) -> float:
+        toks = jnp.asarray(
+            rng.integers(0, cfg.vocab, (bs, prompt_len)), jnp.int32)
+        t0 = time.perf_counter()
+        logits, cache = model.prefill(params, {"tokens": toks},
+                                      max_len=prompt_len + gen_len)
+        nxt = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+        for _ in range(gen_len):
+            logits, cache = model.decode(params, cache, nxt)
+            nxt = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+        jax.block_until_ready(logits)
+        return (time.perf_counter() - t0) * 1e3
+
+    for bs in batches:
+        run_batch_params(bs)                       # warm the jit caches
+        lat[bs] = run_batch_params(bs)
+    log(f"[serve-real] measured profile (ms/task): "
+        + ", ".join(f"b{b}={lat[b]:.0f}" for b in batches))
+
+    # one-stage ProfileTable over the measured lattice (1 vcpu, 1 vtpu host)
+    class Measured(ProfileTable):
+        pass
+    from repro.core.profiles import FunctionProfile
+    fp = FunctionProfile(arch, lat[1], 0.0, 0.01)
+    cfgs = [Config(b, 1, 1) for b in batches]
+    times = np.array([lat[b] for b in batches])
+    costs = times / np.array(batches) * 1e-6
+    order = np.argsort(times, kind="stable")
+    table = ProfileTable(fp, [cfgs[i] for i in order], times[order],
+                         costs[order])
+
+    # arrival loop: AFW queue + ESG_1Q batching
+    arrivals = np.cumsum(rng.exponential(mean_interval_ms, n_requests))
+    queue: list[tuple[int, float]] = []
+    done: list[tuple[float, float]] = []           # (latency, deadline_slack)
+    t_start = time.perf_counter()
+    i = 0
+    while len(done) < n_requests:
+        now = (time.perf_counter() - t_start) * 1e3
+        while i < n_requests and arrivals[i] <= now:
+            queue.append((i, arrivals[i]))
+            i += 1
+        if not queue:
+            time.sleep(0.002)
+            continue
+        oldest = min(a for _, a in queue)
+        g_slo = max(slo_ms - (now - oldest), 1.0)
+        plans = esg_1q([table.restrict_batch(len(queue))], g_slo, k=3)
+        bs = plans[0].configs[0].batch if plans else 1
+        taken, queue = queue[:bs], queue[bs:]
+        run_batch_params(len(taken))
+        t_done = (time.perf_counter() - t_start) * 1e3
+        for _, arr in taken:
+            done.append((t_done - arr, slo_ms - (t_done - arr)))
+    lats = np.array([d[0] for d in done])
+    hit = float((lats <= slo_ms).mean())
+    out = {"n": n_requests, "hit_rate": hit,
+           "p50_ms": float(np.percentile(lats, 50)),
+           "p95_ms": float(np.percentile(lats, 95))}
+    log(f"[serve-real] {arch}(reduced): hit={hit:.2f} "
+        f"p50={out['p50_ms']:.0f}ms p95={out['p95_ms']:.0f}ms")
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--real", action="store_true")
+    ap.add_argument("--arch", default="internlm2_1_8b")
+    ap.add_argument("--setting", default="moderate-normal")
+    ap.add_argument("--n", type=int, default=200)
+    ap.add_argument("--scheduler", default="esg")
+    args = ap.parse_args()
+    if args.real:
+        serve_real(arch=args.arch, n_requests=args.n if args.n else 48)
+    else:
+        emulate(args.setting, args.n, scheduler=args.scheduler)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,160 @@
+"""Step builders: the jitted (sharded) train / prefill / serve steps.
+
+Each builder returns (fn, in_shardings, out_shardings, input_specs,
+donate_argnums) ready for ``jax.jit(...).lower(...)`` — used by both the
+dry-run (AOT) and the real launchers.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.registry import ModelConfig, ShapeSpec
+from repro.models.model import Model, RunOptions, get_model
+from repro.optim import adamw
+from repro.launch import shardings as sh
+
+
+def _ns(mesh, tree):
+    return sh.to_shardings(tree, mesh)
+
+
+def _mesh_opts(opts: RunOptions, mesh, shape: ShapeSpec,
+               tp: bool = True) -> RunOptions:
+    """Enable sharding constraints with the mesh's dp axes (None when the
+    global batch is too small to shard, e.g. long_500k decode).  Without TP
+    the batch takes the 'model' axis too (pure DP)."""
+    dp = sh.dp_axes(mesh)
+    if not tp:
+        dp = tuple(dp) + (sh.TP,)
+    extent = 1
+    for a in dp:
+        extent *= dict(zip(mesh.axis_names, mesh.devices.shape))[a]
+    dp_spec = tuple(dp) if shape.global_batch >= extent else None
+    return dataclasses.replace(opts, shard_constraints=True, dp_spec=dp_spec,
+                               mesh=mesh)
+
+
+def build_train_step(cfg: ModelConfig, shape: ShapeSpec, mesh,
+                     opts: RunOptions = RunOptions(),
+                     opt_cfg: adamw.AdamWConfig = adamw.AdamWConfig()):
+    tp = sh.tp_applies(cfg, shape, opts.sharding_mode)
+    opts = _mesh_opts(opts, mesh, shape, tp)
+    model = get_model(cfg, opts)
+    multi_pod = "pod" in mesh.axis_names
+
+    def train_step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(model.loss)(params, batch)
+        params, opt_state, _, metrics = adamw.update(
+            opt_cfg, params, grads, opt_state)
+        return params, opt_state, {"loss": loss, **metrics}
+
+    params_specs0 = model.param_specs()
+    p_raw = sh.param_pspecs(cfg)
+    m_raw = sh.moment_pspecs(cfg, multi_pod)
+    if not tp:
+        p_raw, m_raw = sh.strip_tp(p_raw), sh.strip_tp(m_raw)
+        # replicate the (small) embeddings: keeps the chunked CE fully
+        # local instead of all-gathering the global batch per chunk
+        for k in ("embed", "lm_head"):
+            if k in p_raw:
+                p_raw[k] = P(None, None)
+                m_raw[k] = P(sh.FSDP, None)
+    p_spec = sh.sanitize_tree(p_raw, params_specs0, mesh)
+    m_spec = sh.sanitize_tree(m_raw, params_specs0, mesh)
+    opt_spec = {"m": m_spec, "v": m_spec, "step": P()}
+    b_spec = sh.batch_pspecs(cfg, shape, mesh,
+                             dp=opts.dp_spec or sh.dp_axes(mesh))
+    in_sh = (_ns(mesh, p_spec), _ns(mesh, opt_spec), _ns(mesh, b_spec))
+    out_sh = (_ns(mesh, p_spec), _ns(mesh, opt_spec),
+              {"loss": NamedSharding(mesh, P()),
+               "grad_norm": NamedSharding(mesh, P()),
+               "lr": NamedSharding(mesh, P())})
+
+    params_specs = model.param_specs()
+    opt_specs = {
+        "m": jax.tree.map(lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32),
+                          params_specs),
+        "v": jax.tree.map(lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32),
+                          params_specs),
+        "step": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+    input_specs = (params_specs, opt_specs, model.input_specs(shape))
+    return train_step, in_sh, out_sh, input_specs, (0, 1)
+
+
+def build_prefill_step(cfg: ModelConfig, shape: ShapeSpec, mesh,
+                       opts: RunOptions = RunOptions()):
+    opts = _mesh_opts(opts, mesh, shape)
+    model = get_model(cfg, opts)
+
+    def prefill_step(params, batch):
+        logits, cache = model.prefill(params, batch, max_len=shape.seq_len)
+        return logits, cache
+
+    p_raw = sh.param_pspecs(cfg)
+    if sh.weight_stationary_serving(cfg):
+        p_raw = sh.strip_fsdp(p_raw)
+    p_spec = sh.sanitize_tree(p_raw, model.param_specs(), mesh)
+    b_spec = sh.batch_pspecs(cfg, shape, mesh)
+    c_spec = sh.sanitize_tree(
+        sh.cache_pspecs(cfg, shape, mesh),
+        model.cache_specs(shape.global_batch, shape.seq_len), mesh)
+    dp = sh.dp_axes(mesh)
+    logits_spec = sh.sanitize_pspec(
+        P(dp if shape.global_batch >= 2 else None, sh.TP),
+        (shape.global_batch, cfg.vocab), mesh)
+    in_sh = (_ns(mesh, p_spec), _ns(mesh, b_spec))
+    out_sh = (NamedSharding(mesh, logits_spec), _ns(mesh, c_spec))
+    input_specs = (model.param_specs(), model.input_specs(shape))
+    return prefill_step, in_sh, out_sh, input_specs, ()
+
+
+def build_serve_step(cfg: ModelConfig, shape: ShapeSpec, mesh,
+                     opts: RunOptions = RunOptions()):
+    """Decode: one new token against a seq_len-deep cache."""
+    opts = _mesh_opts(opts, mesh, shape)
+    model = get_model(cfg, opts)
+
+    def serve_step(params, cache, tokens):
+        logits, cache = model.decode(params, cache, tokens)
+        return logits, cache
+
+    p_raw = sh.param_pspecs(cfg)
+    if sh.weight_stationary_serving(cfg):
+        p_raw = sh.strip_fsdp(p_raw)
+    p_spec = sh.sanitize_tree(p_raw, model.param_specs(), mesh)
+    c_spec = sh.sanitize_tree(
+        sh.cache_pspecs(cfg, shape, mesh),
+        model.cache_specs(shape.global_batch, shape.seq_len), mesh)
+    dp = sh.dp_axes(mesh)
+    dp_extent = 1
+    for a in dp:
+        dp_extent *= dict(zip(mesh.axis_names, mesh.devices.shape))[a]
+    bdim = dp if shape.global_batch >= dp_extent else None
+    tok_spec = {"tokens": sh.sanitize_pspec(
+        P(bdim, None), (shape.global_batch, 1), mesh)}
+    logits_spec = sh.sanitize_pspec(P(bdim, sh.TP),
+                                    (shape.global_batch, cfg.vocab), mesh)
+    in_sh = (_ns(mesh, p_spec), _ns(mesh, c_spec),
+             NamedSharding(mesh, tok_spec["tokens"]))
+    out_sh = (NamedSharding(mesh, logits_spec), _ns(mesh, c_spec))
+
+    cache_specs = model.cache_specs(shape.global_batch, shape.seq_len)
+    tok = jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32)
+    input_specs = (model.param_specs(), cache_specs, tok)
+    return serve_step, in_sh, out_sh, input_specs, (1,)
+
+
+def build_step(cfg: ModelConfig, shape: ShapeSpec, mesh,
+               opts: RunOptions = RunOptions()):
+    if shape.kind == "train":
+        return build_train_step(cfg, shape, mesh, opts)
+    if shape.kind == "prefill":
+        return build_prefill_step(cfg, shape, mesh, opts)
+    return build_serve_step(cfg, shape, mesh, opts)

@@ -1,0 +1,50 @@
+"""Training launcher CLI.
+
+Reduced configs run for real on this host; full configs are exercised via
+the dry-run (``repro.launch.dryrun``).  On a real pod this entrypoint runs
+under ``jax.distributed.initialize`` with the production mesh and the same
+Trainer loop (checkpoint/restart, deterministic data replay).
+
+  PYTHONPATH=src python -m repro.launch.train --arch internlm2_1_8b \
+      --reduced --steps 200
+"""
+from __future__ import annotations
+
+import argparse
+
+from repro.configs.registry import get_config, reduced as reduce_cfg
+from repro.data.pipeline import DataConfig
+from repro.optim import adamw
+from repro.runtime.trainer import Trainer, TrainerConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="internlm2_1_8b")
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--compress-grads", action="store_true")
+    ap.add_argument("--lr", type=float, default=3e-3)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = reduce_cfg(cfg)
+    data_cfg = DataConfig(vocab=cfg.vocab, seq_len=args.seq,
+                          global_batch=args.batch)
+    tcfg = TrainerConfig(steps=args.steps, ckpt_every=args.ckpt_every,
+                         ckpt_dir=args.ckpt_dir)
+    opt_cfg = adamw.AdamWConfig(lr=args.lr, warmup_steps=20,
+                                total_steps=args.steps,
+                                compress_grads=args.compress_grads)
+    out = Trainer(cfg, data_cfg, tcfg, opt_cfg=opt_cfg).run()
+    print(f"[train] done: {out['steps_run']} steps, "
+          f"final loss {out['final_loss']:.4f}")
+
+
+if __name__ == "__main__":
+    main()

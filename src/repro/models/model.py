@@ -1,0 +1,115 @@
+"""Unified model facade over the zoo families.
+
+``Model(cfg, opts)`` exposes the step functions consumed by the launcher,
+dry-run, serving layer and tests:
+
+    loss(params, batch)                -> scalar           (train)
+    prefill(params, batch)             -> (logits, cache)  (inference-prefill)
+    decode(params, cache, tokens)      -> (logits, cache)  (decode)
+    param_specs() / init(key)
+    cache_specs(batch, max_len) / init_cache(batch, max_len)
+    input_specs(shape) / dummy_inputs(shape, key)
+
+Batches are dicts: {"tokens": (B, S) int32, "labels": (B, S) int32,
+["prefix_embeds": (B, P, D)]}.  Modality frontends are stubs per the
+assignment spec: ``input_specs`` provides precomputed patch/frame embeddings.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.registry import ModelConfig, ShapeSpec
+from repro.models import transformer, rwkv6, hymba
+from repro.models.transformer import RunOptions
+
+Array = jax.Array
+
+
+def _family_module(cfg: ModelConfig):
+    if cfg.family == "ssm":
+        return rwkv6
+    if cfg.family == "hybrid":
+        return hymba
+    return transformer  # dense | moe | vlm | audio
+
+
+class Model:
+    def __init__(self, cfg: ModelConfig, opts: RunOptions = RunOptions()):
+        self.cfg = cfg
+        self.opts = opts
+        self._m = _family_module(cfg)
+
+    # ---- params -----------------------------------------------------------
+    def param_specs(self):
+        return self._m.param_specs(self.cfg, self.opts)
+
+    def init(self, key: Array):
+        return self._m.init_params(self.cfg, key, self.opts)
+
+    # ---- steps ------------------------------------------------------------
+    def loss(self, params, batch):
+        return self._m.lm_loss(self.cfg, params, batch["tokens"],
+                               batch["labels"],
+                               batch.get("prefix_embeds"), opts=self.opts)
+
+    def forward(self, params, batch):
+        return self._m.forward(self.cfg, params, batch["tokens"],
+                               batch.get("prefix_embeds"), self.opts, "train")
+
+    def prefill(self, params, batch, max_len: Optional[int] = None):
+        kw = {}
+        if self._m is transformer:
+            kw["max_len"] = max_len
+        return self._m.forward(self.cfg, params, batch["tokens"],
+                               batch.get("prefix_embeds"), self.opts,
+                               "prefill", **kw)
+
+    def decode(self, params, cache, tokens):
+        return self._m.decode_step(self.cfg, params, cache, tokens, self.opts)
+
+    # ---- caches -----------------------------------------------------------
+    def cache_specs(self, batch: int, max_len: int):
+        return self._m.cache_specs(self.cfg, batch, max_len, self.opts)
+
+    def init_cache(self, batch: int, max_len: int):
+        return self._m.init_cache(self.cfg, batch, max_len, self.opts)
+
+    # ---- inputs -----------------------------------------------------------
+    def input_specs(self, shape: ShapeSpec) -> dict:
+        """ShapeDtypeStruct stand-ins for every model input of a cell."""
+        cfg = self.cfg
+        b = shape.global_batch
+        if shape.kind == "decode":
+            return {"tokens": jax.ShapeDtypeStruct((b, 1), jnp.int32)}
+        s = shape.seq_len
+        specs = {}
+        if cfg.frontend == "vit" and cfg.n_prefix:
+            s_tok = s - cfg.n_prefix
+            specs["prefix_embeds"] = jax.ShapeDtypeStruct(
+                (b, cfg.n_prefix, cfg.d_model), self.opts.act_dtype)
+        else:
+            s_tok = s
+        specs["tokens"] = jax.ShapeDtypeStruct((b, s_tok), jnp.int32)
+        if shape.kind == "train":
+            specs["labels"] = jax.ShapeDtypeStruct((b, s_tok), jnp.int32)
+        return specs
+
+    def dummy_inputs(self, shape: ShapeSpec, key: Array) -> dict:
+        specs = self.input_specs(shape)
+        out = {}
+        for name, s in specs.items():
+            key, k = jax.random.split(key)
+            if s.dtype == jnp.int32:
+                out[name] = jax.random.randint(k, s.shape, 0, self.cfg.vocab,
+                                               jnp.int32)
+            else:
+                out[name] = jax.random.normal(k, s.shape, jnp.float32).astype(s.dtype)
+        return out
+
+
+def get_model(cfg: ModelConfig, opts: RunOptions = RunOptions()) -> Model:
+    return Model(cfg, opts)

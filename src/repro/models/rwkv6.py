@@ -1,0 +1,307 @@
+"""RWKV6 "Finch" [arXiv:2404.05892] — attention-free, data-dependent decay.
+
+Time-mix uses the WKV6 recurrence per head (K = V = 64):
+
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T          (decay then write)
+    y_t = r_t (S_{t-1} + diag(u) k_t v_t^T)      (read pre-update + bonus)
+
+with per-channel data-dependent decay  w_t = exp(-exp(w0 + lora_w(x_t))).
+
+Prefill/train evaluates the recurrence chunk-parallel (chunk = 32): the
+intra-chunk term is computed with an explicit (t, s, k) pair tensor so decay
+differences stay in log space (numerically safe — no exp(+big)); the
+inter-chunk term and the state update are matmuls.  The Pallas kernel
+(`repro.kernels.rwkv6`) implements the same math with VMEM tiling.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.registry import ModelConfig
+from repro.models import layers as L
+
+Array = jax.Array
+LORA_MIX = 32       # rank of the ddlerp mix lora
+LORA_DECAY = 64     # rank of the decay lora
+WKV_CHUNK = 32
+
+
+# ---------------------------------------------------------------------------
+# Params
+# ---------------------------------------------------------------------------
+def _layer_param_shapes(cfg: ModelConfig) -> dict[str, tuple]:
+    d, f = cfg.d_model, cfg.d_ff
+    h, k = cfg.n_heads, cfg.d_head
+    return {
+        # time-mix
+        "mu_x": (d,), "mu_rkvwg": (5, d),
+        "wmix_a": (d, 5 * LORA_MIX), "wmix_b": (5, LORA_MIX, d),
+        "w0": (d,), "wdec_a": (d, LORA_DECAY), "wdec_b": (LORA_DECAY, d),
+        "u": (h, k),
+        "wr": (d, d), "wk": (d, d), "wv": (d, d), "wg": (d, d), "wo": (d, d),
+        "ln1_scale": (d,), "ln1_bias": (d,),
+        "gn_scale": (d,), "gn_bias": (d,),
+        # channel-mix
+        "mu_ck": (d,), "mu_cr": (d,),
+        "wck": (d, f), "wcv": (f, d), "wcr": (d, d),
+        "ln2_scale": (d,), "ln2_bias": (d,),
+    }
+
+
+def param_specs(cfg: ModelConfig, opts) -> dict:
+    pd = opts.param_dtype
+    lp = {k: jax.ShapeDtypeStruct((cfg.n_layers,) + s, pd)
+          for k, s in _layer_param_shapes(cfg).items()}
+    return {
+        "layers": lp,
+        "embed": jax.ShapeDtypeStruct((cfg.vocab, cfg.d_model), pd),
+        "final_norm_scale": jax.ShapeDtypeStruct((cfg.d_model,), pd),
+        "final_norm_bias": jax.ShapeDtypeStruct((cfg.d_model,), pd),
+        "lm_head": jax.ShapeDtypeStruct((cfg.vocab, cfg.d_model), pd),
+    }
+
+
+def init_params(cfg: ModelConfig, key: Array, opts) -> dict:
+    specs = param_specs(cfg, opts)
+    flat, _ = jax.tree.flatten_with_path(specs)
+    keys = jax.random.split(key, len(flat))
+    out = []
+    for (path, spec), kk in zip(flat, keys):
+        name = path[-1].key
+        if "scale" in name:
+            arr = jnp.ones(spec.shape, spec.dtype)
+        elif "bias" in name or name.startswith("mu") or name == "w0":
+            arr = jnp.zeros(spec.shape, spec.dtype)
+            if name == "w0":   # decay init ~ -5..-0.5 pre-double-exp
+                arr = jnp.full(spec.shape, -1.0, spec.dtype)
+        elif name == "u":
+            arr = jnp.zeros(spec.shape, spec.dtype)
+        else:
+            arr = L.dense_init(kk, spec.shape, spec.dtype)
+        out.append(arr)
+    return jax.tree.unflatten(jax.tree.structure(specs), out)
+
+
+# ---------------------------------------------------------------------------
+# WKV6 chunked recurrence
+# ---------------------------------------------------------------------------
+def wkv6_chunked(r, k, v, lw, u, s0, chunk: int = WKV_CHUNK):
+    """Chunk-parallel WKV6.
+
+    r/k/v: (B, T, H, K); lw: (B, T, H, K) log-decay (<= 0); u: (H, K);
+    s0: (B, H, K, V) f32.  Returns (y (B,T,H,K_v), s_final).
+    """
+    b, t, h, kd = r.shape
+    chunk = min(chunk, t)
+    nc = t // chunk
+    tm = nc * chunk           # main part; remainder handled after the scan
+    rs = r[:, :tm].reshape(b, nc, chunk, h, kd)
+    ks = k[:, :tm].reshape(b, nc, chunk, h, kd)
+    vs = v[:, :tm].reshape(b, nc, chunk, h, kd)
+    lws = lw[:, :tm].reshape(b, nc, chunk, h, kd).astype(jnp.float32)
+
+    def chunk_step(s, inp):
+        rc, kc, vc, lwc = inp               # (B, C, H, K)
+        rc32 = rc.astype(jnp.float32)
+        kc32 = kc.astype(jnp.float32)
+        vc32 = vc.astype(jnp.float32)
+        cum = jnp.cumsum(lwc, axis=1)       # inclusive Σ_{τ<=t} lw
+        cum_prev = cum - lwc                # Σ_{τ<=t-1}
+        # inter-chunk: y_t += (r_t * exp(cum_prev_t)) @ S
+        r_dec = rc32 * jnp.exp(cum_prev)
+        y = jnp.einsum("bchk,bhkv->bchv", r_dec, s)
+        # intra-chunk (t > s): pairwise log-space decay differences
+        ddiff = cum_prev[:, :, None] - cum[:, None, :]      # (B, C, C, H, K)
+        att = jnp.einsum("bthk,bshk,btshk->btsh",
+                         rc32, kc32, jnp.exp(jnp.clip(ddiff, -60.0, 0.0)))
+        c = rc.shape[1]
+        mask = jnp.tril(jnp.ones((c, c), bool), k=-1)
+        att = jnp.where(mask[None, :, :, None], att, 0.0)
+        y = y + jnp.einsum("btsh,bshv->bthv", att, vc32)
+        # diagonal bonus term: r_t (u ⊙ k_t) v_t
+        diag = jnp.einsum("bthk,hk,bthk->bth", rc32, u.astype(jnp.float32), kc32)
+        y = y + diag[..., None] * vc32
+        # state update: S' = diag(exp(cum_C)) S + Σ_s exp(cum_C - cum_s) k_s v_s
+        tail = cum[:, -1:, :] - cum                          # (B, C, H, K) >= 0? no: <=0
+        k_dec = kc32 * jnp.exp(tail)
+        s = s * jnp.exp(cum[:, -1])[:, :, :, None] + jnp.einsum(
+            "bshk,bshv->bhkv", k_dec, vc32)
+        return s, y
+
+    xs = (jnp.moveaxis(rs, 1, 0), jnp.moveaxis(ks, 1, 0),
+          jnp.moveaxis(vs, 1, 0), jnp.moveaxis(lws, 1, 0))
+    s_fin, ys = jax.lax.scan(chunk_step, s0, xs)
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, tm, h, kd)
+    if tm < t:  # remainder chunk
+        s_fin, y_rem = chunk_step(
+            s_fin, (r[:, tm:], k[:, tm:], v[:, tm:],
+                    lw[:, tm:].astype(jnp.float32)))
+        y = jnp.concatenate([y, y_rem], axis=1)
+    return y.astype(r.dtype), s_fin
+
+
+def wkv6_step(r, k, v, lw, u, s):
+    """Single decode step.  r/k/v/lw: (B, 1, H, K); s: (B, H, K, V)."""
+    r1 = r[:, 0].astype(jnp.float32)
+    k1 = k[:, 0].astype(jnp.float32)
+    v1 = v[:, 0].astype(jnp.float32)
+    w1 = jnp.exp(lw[:, 0].astype(jnp.float32))
+    kv = k1[..., :, None] * v1[..., None, :]                # (B, H, K, V)
+    y = jnp.einsum("bhk,bhkv->bhv", r1, s + u.astype(jnp.float32)[None, :, :, None] * kv)
+    s = s * w1[..., None] + kv
+    return y[:, None].astype(r.dtype), s
+
+
+# ---------------------------------------------------------------------------
+# Layer pieces
+# ---------------------------------------------------------------------------
+def _ddlerp(w, x, x_prev):
+    """Data-dependent lerp → (xr, xk, xv, xw, xg)."""
+    xx = x_prev - x
+    base = x + xx * w["mu_x"]
+    lora = jnp.tanh(jnp.einsum("btd,dr->btr", base, w["wmix_a"]))
+    lora = lora.reshape(*lora.shape[:-1], 5, LORA_MIX)
+    mix = w["mu_rkvwg"] + jnp.einsum("btir,ird->btid", lora, w["wmix_b"])
+    out = x[..., None, :] + xx[..., None, :] * mix          # (B, T, 5, D)
+    return [out[..., i, :] for i in range(5)]
+
+
+def time_mix(cfg, w, x, x_prev, s0, opts=None):
+    """x: (B,T,D); x_prev: same (shifted).  Returns (out, s_fin)."""
+    b, t, d = x.shape
+    h, kd = cfg.n_heads, cfg.d_head
+    xr, xk, xv, xw, xg = _ddlerp(w, x, x_prev)
+    r = jnp.einsum("btd,de->bte", xr, w["wr"]).reshape(b, t, h, kd)
+    k = jnp.einsum("btd,de->bte", xk, w["wk"]).reshape(b, t, h, kd)
+    v = jnp.einsum("btd,de->bte", xv, w["wv"]).reshape(b, t, h, kd)
+    r = L.constrain(r, opts, ("B", None, "M", None))
+    k = L.constrain(k, opts, ("B", None, "M", None))
+    v = L.constrain(v, opts, ("B", None, "M", None))
+    g = jax.nn.silu(jnp.einsum("btd,de->bte", xg, w["wg"]))
+    wlog = w["w0"] + jnp.einsum(
+        "btd,dr->btr", jnp.tanh(jnp.einsum("btd,dr->btr", xw, w["wdec_a"])),
+        w["wdec_b"])
+    lw = -jnp.exp(jnp.clip(wlog.astype(jnp.float32), -20.0, 4.0))  # log decay <= 0
+    lw = lw.reshape(b, t, h, kd)
+    u = w["u"]
+    use_kernel = bool(opts and opts.use_kernels)
+    if t == 1:
+        y, s_fin = wkv6_step(r, k, v, lw, u, s0)
+    elif use_kernel:
+        from repro.kernels.rwkv6 import ops as rwkv_ops
+        y, s_fin = rwkv_ops.wkv6(r, k, v, lw, u, s0)
+    else:
+        y, s_fin = wkv6_chunked(r, k, v, lw, u, s0)
+    # per-head group norm
+    y = y.reshape(b, t, h, kd)
+    mean = y.mean(-1, keepdims=True)
+    var = y.var(-1, keepdims=True)
+    y = (y - mean) * jax.lax.rsqrt(var + 64e-5)
+    y = y.reshape(b, t, d) * w["gn_scale"] + w["gn_bias"]
+    out = jnp.einsum("btd,de->bte", (y * g).astype(x.dtype), w["wo"])
+    return out, s_fin
+
+
+def channel_mix(cfg, w, x, x_prev):
+    xx = x_prev - x
+    xk = x + xx * w["mu_ck"]
+    xr = x + xx * w["mu_cr"]
+    kk = jnp.square(jax.nn.relu(jnp.einsum("btd,df->btf", xk, w["wck"])))
+    out = jax.nn.sigmoid(jnp.einsum("btd,de->bte", xr, w["wcr"])) * jnp.einsum(
+        "btf,fd->btd", kk, w["wcv"])
+    return out
+
+
+def _shift(x, prev_last):
+    """x: (B,T,D); prev_last: (B,D) — previous token of position 0."""
+    return jnp.concatenate([prev_last[:, None, :], x[:, :-1]], axis=1)
+
+
+def layer_full(cfg, w, x, state, opts):
+    """state: dict(wkv (B,H,K,V), tm (B,D), cm (B,D))."""
+    h1 = L.layer_norm(x, w["ln1_scale"], w["ln1_bias"])
+    tm_out, s_fin = time_mix(cfg, w, h1, _shift(h1, state["tm"]), state["wkv"],
+                             opts=opts)
+    x = L.constrain(x + tm_out, opts, ("B", None, None))
+    h2 = L.layer_norm(x, w["ln2_scale"], w["ln2_bias"])
+    x = L.constrain(x + channel_mix(cfg, w, h2, _shift(h2, state["cm"])),
+                    opts, ("B", None, None))
+    new_state = {"wkv": s_fin, "tm": h1[:, -1], "cm": h2[:, -1]}
+    return x, new_state
+
+
+# ---------------------------------------------------------------------------
+# Model API
+# ---------------------------------------------------------------------------
+def cache_specs(cfg: ModelConfig, batch: int, max_len: int, opts) -> dict:
+    h, kd, d = cfg.n_heads, cfg.d_head, cfg.d_model
+    ls = cfg.n_layers
+    return {
+        "t": jax.ShapeDtypeStruct((), jnp.int32),
+        "wkv": jax.ShapeDtypeStruct((ls, batch, h, kd, kd), jnp.float32),
+        "tm": jax.ShapeDtypeStruct((ls, batch, d), opts.act_dtype),
+        "cm": jax.ShapeDtypeStruct((ls, batch, d), opts.act_dtype),
+    }
+
+
+def init_cache(cfg, batch, max_len, opts):
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                        cache_specs(cfg, batch, max_len, opts))
+
+
+def _stack(cfg, params, x, cache, opts):
+    def body(x, scanned):
+        w, wkv, tm, cm = scanned
+        fn = layer_full
+        if opts.remat == "full":
+            fn = jax.checkpoint(layer_full,
+                                policy=jax.checkpoint_policies.nothing_saveable,
+                                static_argnums=(0, 4))
+        x, ns = fn(cfg, w, x, {"wkv": wkv, "tm": tm, "cm": cm}, opts)
+        return x, (ns["wkv"], ns["tm"], ns["cm"])
+
+    xs = (params["layers"], cache["wkv"], cache["tm"], cache["cm"])
+    x, (wkv, tm, cm) = jax.lax.scan(body, x, xs)
+    return x, {"wkv": wkv, "tm": tm, "cm": cm}
+
+
+def forward(cfg, params, tokens, prefix_embeds=None, opts=None, mode="train",
+            cache=None):
+    b, s = tokens.shape
+    x = L.constrain(params["embed"][tokens].astype(opts.act_dtype),
+                    opts, ("B", None, None))
+    if cache is None:
+        cache = init_cache(cfg, b, s, opts)
+    x, new_state = _stack(cfg, params, x, cache, opts)
+    x = L.layer_norm(x, params["final_norm_scale"], params["final_norm_bias"])
+    if mode == "hidden":
+        return x, 0.0
+    if mode == "train":
+        logits = jnp.einsum("bsd,vd->bsv", x, params["lm_head"],
+                            preferred_element_type=jnp.float32)
+        return logits, 0.0
+    logits = jnp.einsum("bd,vd->bv", x[:, -1], params["lm_head"],
+                        preferred_element_type=jnp.float32)
+    new_state["t"] = cache["t"] + s if "t" in cache else jnp.asarray(s, jnp.int32)
+    return logits, new_state
+
+
+def decode_step(cfg, params, cache, tokens, opts):
+    x = params["embed"][tokens[:, :1]].astype(opts.act_dtype)
+    x, new_state = _stack(cfg, params, x, cache, opts)
+    x = L.layer_norm(x, params["final_norm_scale"], params["final_norm_bias"])
+    logits = jnp.einsum("bsd,vd->bsv", x, params["lm_head"],
+                        preferred_element_type=jnp.float32)
+    new_state["t"] = cache["t"] + 1
+    return logits[:, 0], new_state
+
+
+def lm_loss(cfg, params, tokens, labels, prefix_embeds=None, opts=None):
+    from repro.models.transformer import chunked_lm_loss
+    x, _ = forward(cfg, params, tokens, None, opts, "hidden")
+    return chunked_lm_loss(x, params["lm_head"], labels, opts)

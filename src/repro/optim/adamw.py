@@ -1,0 +1,111 @@
+"""AdamW with cosine schedule, global-norm clipping and optional int8
+gradient compression (error feedback) for the data-parallel all-reduce.
+
+Pure-functional: ``init`` builds the (fp32) moment state; ``update`` returns
+new (params, state).  The compression path quantises gradients to int8 with
+a per-tensor scale *before* they cross the DP axis and keeps the residual
+locally (error feedback), the standard bandwidth/quality trade
+[1-bit Adam, arXiv:2102.02888-style].
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    compress_grads: bool = False      # int8 + error feedback across DP
+
+
+def schedule(cfg: AdamWConfig, step: Array) -> Array:
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip((step - cfg.warmup_steps) /
+                    jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+    return cfg.lr * warm * (0.1 + 0.9 * cos)
+
+
+def init(params) -> dict:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    state = {
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+    return state
+
+
+def init_error_feedback(params) -> dict:
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def compress_int8(g: Array) -> tuple[Array, Array]:
+    """Per-tensor symmetric int8 quantisation."""
+    scale = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def decompress_int8(q: Array, scale: Array) -> Array:
+    return q.astype(jnp.float32) * scale
+
+
+def compress_residual(g: Array, err: Array) -> tuple[Array, Array]:
+    """Quantise (g + err); return (dequantised g_hat, new residual)."""
+    g32 = g.astype(jnp.float32) + err
+    q, scale = compress_int8(g32)
+    g_hat = decompress_int8(q, scale)
+    return g_hat, g32 - g_hat
+
+
+def update(cfg: AdamWConfig, params, grads, state,
+           error_feedback: Optional[dict] = None):
+    """Returns (params', state', error_feedback', metrics)."""
+    if cfg.compress_grads:
+        assert error_feedback is not None
+        pairs = jax.tree.map(compress_residual, grads, error_feedback)
+        grads = jax.tree.map(lambda p: p[0], pairs,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        error_feedback = jax.tree.map(lambda p: p[1], pairs,
+                                      is_leaf=lambda x: isinstance(x, tuple))
+
+    g32 = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+    gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g))
+                         for g in jax.tree.leaves(g32)))
+    scale_clip = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-12))
+    g32 = jax.tree.map(lambda g: g * scale_clip, g32)
+
+    step = state["step"] + 1
+    lr = schedule(cfg, step)
+    b1c = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+
+    new_m = jax.tree.map(lambda m, g: cfg.b1 * m + (1 - cfg.b1) * g,
+                         state["m"], g32)
+    new_v = jax.tree.map(lambda v, g: cfg.b2 * v + (1 - cfg.b2) * g * g,
+                         state["v"], g32)
+
+    def upd(p, m, v):
+        mh = m / b1c
+        vh = v / b2c
+        delta = mh / (jnp.sqrt(vh) + cfg.eps) + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+
+    new_params = jax.tree.map(upd, params, new_m, new_v)
+    new_state = {"m": new_m, "v": new_v, "step": step}
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_params, new_state, error_feedback, metrics

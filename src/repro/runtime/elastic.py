@@ -1,0 +1,44 @@
+"""Elastic scaling: re-mesh + reshard a training/serving state.
+
+When nodes join or fail permanently, the job restarts on a new mesh shape;
+``reshard_state`` moves the checkpointed state onto the new mesh via
+``jax.device_put`` with the new NamedShardings (the checkpoint layer
+already restores through the same path, so scale-up/down = restore with a
+different mesh — no format change).
+
+``shrink_mesh`` models node failure: drop a data-parallel slice and rebuild
+(the global batch is re-split by the deterministic data pipeline, so the
+training stream is preserved).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+def make_mesh_from_devices(devices, shape: tuple[int, ...],
+                           axes: tuple[str, ...]):
+    devs = np.asarray(devices[: int(np.prod(shape))]).reshape(shape)
+    return jax.sharding.Mesh(devs, axes)
+
+
+def shrink_mesh(mesh, axis: str, new_size: int):
+    """Drop trailing slices along ``axis`` (simulated node failure)."""
+    names = list(mesh.axis_names)
+    idx = names.index(axis)
+    devs = mesh.devices
+    sl = [slice(None)] * devs.ndim
+    sl[idx] = slice(0, new_size)
+    return jax.sharding.Mesh(devs[tuple(sl)], mesh.axis_names)
+
+
+def reshard_state(state, pspecs, new_mesh):
+    """Move every leaf onto ``new_mesh`` with its PartitionSpec."""
+    def move(leaf, spec):
+        return jax.device_put(leaf, NamedSharding(new_mesh, spec))
+    return jax.tree.map(
+        move, state, pspecs,
+        is_leaf=lambda x: not isinstance(x, (dict, list, tuple)))

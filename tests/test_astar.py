@@ -1,0 +1,68 @@
+"""ESG_1Q: exact K-best agreement with brute force (the paper's claim that
+dual-blade pruning does not compromise quality), via hypothesis."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.astar import PathResult, SearchStats, brute_force, esg_1q
+from repro.core.profiles import Config, FunctionProfile, ProfileTable
+
+
+def tiny_table(seed: int, name: str = "f") -> ProfileTable:
+    rng = np.random.default_rng(seed)
+    fp = FunctionProfile(name, float(rng.uniform(50, 1000)), 1000.0, 1.0,
+                         float(rng.uniform(0.1, 0.5)))
+    return ProfileTable.build(fp, batches=(1, 2, 4, 8), vcpus=(1, 2, 4),
+                              vgpus=(1, 2, 4))
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(1, 4), st.floats(1.05, 8.0), st.integers(0, 10_000),
+       st.integers(1, 7))
+def test_astar_matches_brute_force(n_stages, slo_mult, seed, k):
+    tables = [tiny_table(seed + i, f"f{i}") for i in range(n_stages)]
+    g_slo = sum(t.min_time for t in tables) * slo_mult
+    res = esg_1q(tables, g_slo, k=k)
+    ref = brute_force(tables, g_slo, k=k)
+    assert len(res) == len(ref)
+    for a, b in zip(res, ref):
+        assert a.est_job_cost == pytest.approx(b.est_job_cost, abs=1e-12)
+        assert a.est_time_ms < g_slo
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 10_000))
+def test_astar_pareto_preserves_top1(seed):
+    tables = [tiny_table(seed + i) for i in range(3)]
+    g_slo = sum(t.min_time for t in tables) * 2.0
+    full = esg_1q(tables, g_slo, k=1)
+    pareto = esg_1q([t.pareto() for t in tables], g_slo, k=1)
+    assert full[0].est_job_cost == pytest.approx(
+        pareto[0].est_job_cost, rel=1e-9)
+
+
+def test_infeasible_returns_fastest_path():
+    tables = [tiny_table(1), tiny_table(2)]
+    res = esg_1q(tables, g_slo_ms=1e-3, k=5)
+    assert len(res) == 1
+    fastest = sum(t.min_time for t in tables)
+    assert res[0].est_time_ms == pytest.approx(fastest)
+
+
+def test_pruning_actually_prunes():
+    tables = [tiny_table(i) for i in range(3)]
+    g_slo = sum(t.min_time for t in tables) * 1.5
+    stats = SearchStats()
+    esg_1q(tables, g_slo, k=5, stats=stats)
+    n_total = np.prod([len(t.configs) for t in tables])
+    assert stats.nodes_pushed < n_total / 3
+    assert stats.pruned_time + stats.pruned_cost > 0
+
+
+def test_sorted_by_cost_and_feasible():
+    tables = [tiny_table(i + 50) for i in range(3)]
+    g_slo = sum(t.min_time for t in tables) * 3.0
+    res = esg_1q(tables, g_slo, k=8)
+    costs = [r.est_job_cost for r in res]
+    assert costs == sorted(costs)
+    assert all(r.est_time_ms < g_slo for r in res)

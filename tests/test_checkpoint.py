@@ -1,0 +1,129 @@
+"""Checkpoint/restore, restart equivalence, elastic resharding,
+gradient compression."""
+import shutil
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import checkpointing as ckpt
+from repro.configs.registry import get_config, reduced
+from repro.data.pipeline import DataConfig, TokenStream
+from repro.models.model import RunOptions
+from repro.optim import adamw
+from repro.runtime.trainer import SimulatedFailure, Trainer, TrainerConfig
+
+OPTS = RunOptions(attn_chunk=32, remat="none",
+                  param_dtype=jnp.float32, act_dtype=jnp.float32)
+
+
+def test_save_restore_roundtrip(tmp_path):
+    tree = {"a": jnp.arange(12.0).reshape(3, 4),
+            "b": {"c": jnp.ones((5,), jnp.int32)}, "step": jnp.asarray(7)}
+    ckpt.save(tmp_path, 3, tree)
+    out, step = ckpt.restore(tmp_path, tree)
+    assert step == 3
+    for x, y in zip(jax.tree.leaves(tree), jax.tree.leaves(out)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_gc_keeps_latest(tmp_path):
+    tree = {"a": jnp.zeros(3)}
+    for s in (1, 2, 3, 4, 5):
+        ckpt.save(tmp_path, s, tree, keep=2)
+    assert ckpt.latest_step(tmp_path) == 5
+    _, step = ckpt.restore(tmp_path, tree)
+    assert step == 5
+    with pytest.raises(Exception):
+        ckpt.restore(tmp_path, tree, step=1)
+
+
+def test_restart_equivalence(tmp_path):
+    cfg = reduced(get_config("internlm2_1_8b"))
+    dc = DataConfig(vocab=cfg.vocab, seq_len=32, global_batch=2)
+    a = Trainer(cfg, dc, TrainerConfig(steps=12, ckpt_every=4,
+                                       ckpt_dir=str(tmp_path / "a"),
+                                       log_every=100), OPTS,
+                log_fn=lambda *_: None)
+    ra = a.run()
+    b1 = Trainer(cfg, dc, TrainerConfig(steps=12, ckpt_every=4,
+                                        ckpt_dir=str(tmp_path / "b"),
+                                        log_every=100, fail_at_step=6),
+                 OPTS, log_fn=lambda *_: None)
+    with pytest.raises(SimulatedFailure):
+        b1.run()
+    b2 = Trainer(cfg, dc, TrainerConfig(steps=12, ckpt_every=4,
+                                        ckpt_dir=str(tmp_path / "b"),
+                                        log_every=100), OPTS,
+                 log_fn=lambda *_: None)
+    rb = b2.run()
+    assert ra["final_loss"] == pytest.approx(rb["final_loss"], abs=1e-6)
+
+
+def test_data_pipeline_deterministic():
+    dc = DataConfig(vocab=128, seq_len=16, global_batch=4, seed=5)
+    s1, s2 = TokenStream(dc), TokenStream(dc)
+    for step in (0, 3, 17):
+        b1, b2 = s1.batch(step), s2.batch(step)
+        np.testing.assert_array_equal(np.asarray(b1["tokens"]),
+                                      np.asarray(b2["tokens"]))
+    assert not np.array_equal(np.asarray(s1.batch(0)["tokens"]),
+                              np.asarray(s1.batch(1)["tokens"]))
+
+
+def test_host_slicing_partitions_batch():
+    dc = DataConfig(vocab=128, seq_len=8, global_batch=8)
+    ts = TokenStream(dc)
+    full = np.asarray(ts.batch(2)["tokens"])
+    parts = [np.asarray(ts.batch(2, ts.host_slice(i, 4))["tokens"])
+             for i in range(4)]
+    np.testing.assert_array_equal(np.concatenate(parts), full)
+
+
+def test_grad_compression_error_feedback():
+    g = jnp.asarray(np.random.default_rng(0).normal(size=(64, 64)) * 0.01,
+                    jnp.float32)
+    err = jnp.zeros_like(g)
+    total = jnp.zeros_like(g)
+    truth = jnp.zeros_like(g)
+    for _ in range(20):
+        g_hat, err = adamw.compress_residual(g, err)
+        total = total + g_hat
+        truth = truth + g
+    # error feedback keeps the long-run average unbiased
+    rel = float(jnp.abs(total - truth).max() / jnp.abs(truth).max())
+    assert rel < 0.02
+
+
+def test_compressed_training_still_learns(tmp_path):
+    cfg = reduced(get_config("internlm2_1_8b"))
+    dc = DataConfig(vocab=cfg.vocab, seq_len=32, global_batch=2)
+    t = Trainer(cfg, dc,
+                TrainerConfig(steps=15, ckpt_every=100,
+                              ckpt_dir=str(tmp_path / "c"), log_every=100),
+                OPTS, opt_cfg=adamw.AdamWConfig(lr=3e-3, warmup_steps=2,
+                                                total_steps=15,
+                                                compress_grads=True),
+                log_fn=lambda *_: None)
+    r = t.run()
+    assert r["losses"][-1] < r["losses"][0]
+
+
+def test_elastic_reshard(tmp_path):
+    """Restore a checkpoint onto a different (smaller) device layout."""
+    from repro.runtime import elastic
+    tree = {"w": jnp.arange(64.0).reshape(8, 8)}
+    ckpt.save(tmp_path, 1, tree)
+    devs = jax.devices()
+    mesh = jax.sharding.Mesh(np.array(devs[:1]).reshape(1, 1),
+                             ("data", "model"))
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    shard = {"w": NamedSharding(mesh, P("data", None))}
+    out, _ = ckpt.restore(tmp_path, tree, shardings=shard)
+    np.testing.assert_array_equal(np.asarray(out["w"]),
+                                  np.asarray(tree["w"]))
+    smaller = elastic.shrink_mesh(mesh, "data", 1)
+    moved = elastic.reshard_state(out, {"w": P(None, None)}, smaller)
+    np.testing.assert_array_equal(np.asarray(moved["w"]),
+                                  np.asarray(tree["w"]))

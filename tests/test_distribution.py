@@ -1,0 +1,86 @@
+"""Distribution layer on a 1x1 test mesh: the step builders compile AND
+produce the same values as the unsharded model paths (exercises the
+shard_map flash-decode and the constraint plumbing end-to-end)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import SHAPES, ShapeSpec, get_config, reduced
+from repro.launch import shardings as sh
+from repro.launch.mesh import make_test_mesh
+from repro.launch.steps import build_prefill_step, build_serve_step, \
+    build_train_step
+from repro.models.model import RunOptions, get_model
+
+OPTS = RunOptions(attn_chunk=16, remat="none",
+                  param_dtype=jnp.float32, act_dtype=jnp.float32)
+SMALL = ShapeSpec("small_decode", 64, 2, "decode")
+SMALL_TRAIN = ShapeSpec("small_train", 32, 2, "train")
+
+
+@pytest.mark.parametrize("arch", ["internlm2_20b", "mixtral_8x22b",
+                                  "llama4_maverick_400b_a17b"])
+def test_serve_step_matches_model_decode(arch):
+    cfg = reduced(get_config(arch))
+    mesh = make_test_mesh()
+    fn, in_sh, out_sh, specs, donate = build_serve_step(cfg, SMALL, mesh, OPTS)
+    model = get_model(cfg, OPTS)
+    params = model.init(jax.random.PRNGKey(0))
+    cache = model.init_cache(SMALL.global_batch, SMALL.seq_len)
+    cache["t"] = jnp.asarray(10, jnp.int32)
+    tok = jnp.ones((SMALL.global_batch, 1), jnp.int32)
+    with mesh:
+        jitted = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh)
+        logits_sharded, _ = jitted(params, jax.tree.map(jnp.copy, cache), tok)
+    logits_plain, _ = model.decode(params, cache, tok)
+    np.testing.assert_allclose(np.asarray(logits_sharded),
+                               np.asarray(logits_plain), atol=2e-4, rtol=2e-4)
+
+
+def test_train_step_runs_on_mesh():
+    cfg = reduced(get_config("internlm2_1_8b"))
+    mesh = make_test_mesh()
+    fn, in_sh, out_sh, specs, donate = build_train_step(
+        cfg, SMALL_TRAIN, mesh, OPTS)
+    model = get_model(cfg, OPTS)
+    params = model.init(jax.random.PRNGKey(0))
+    from repro.optim import adamw
+    opt = adamw.init(params)
+    batch = model.dummy_inputs(SMALL_TRAIN, jax.random.PRNGKey(1))
+    with mesh:
+        jitted = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh)
+        p2, o2, m = jitted(params, opt, batch)
+    assert jnp.isfinite(m["loss"])
+
+
+def test_prefill_step_compiles_abstract():
+    cfg = reduced(get_config("hymba_1_5b"))
+    mesh = make_test_mesh()
+    shape = ShapeSpec("small_prefill", 64, 2, "prefill")
+    fn, in_sh, out_sh, specs, donate = build_prefill_step(
+        cfg, shape, mesh, OPTS)
+    with mesh:
+        compiled = jax.jit(fn, in_shardings=in_sh,
+                           out_shardings=out_sh).lower(*specs).compile()
+    assert compiled.cost_analysis() is not None
+
+
+def test_sanitize_pspec_drops_nondivisible():
+    from jax.sharding import PartitionSpec as P
+    mesh = make_test_mesh((1, 1))
+    # both axes size 1 -> everything divisible; now fake a size check
+    spec = sh.sanitize_pspec(P("model", "data"), (32001, 1600), mesh)
+    assert spec == P("model", "data")     # size-1 axes always divide
+
+
+def test_tp_policy():
+    cfg_small = get_config("musicgen_medium")
+    cfg_big = get_config("qwen1_5_110b")
+    assert not sh.tp_applies(cfg_small, SHAPES["train_4k"])
+    assert sh.tp_applies(cfg_big, SHAPES["train_4k"])
+    assert sh.tp_applies(cfg_small, SHAPES["decode_32k"])
+    assert sh.weight_stationary_serving(get_config("internlm2_20b"))
+    assert not sh.weight_stationary_serving(cfg_big)

@@ -1,0 +1,90 @@
+"""Dominator tree + SLO distribution invariants (incl. DAGs w/ splits)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.dominator import (anl_labels, distribute_slo, dominator_tree,
+                                  reduce_chain)
+from repro.core.profiles import FunctionProfile, ProfileTable
+from repro.core.workflows import PAPER_APPS, Workflow
+
+
+def tables_for(wf: Workflow) -> dict:
+    out = {}
+    for i, f in enumerate(sorted({wf.func_of[s] for s in wf.stages})):
+        fp = FunctionProfile(f, 100.0 * (i + 1), 1000.0, 1.0)
+        out[f] = ProfileTable.build(fp, batches=(1, 2), vcpus=(1, 2),
+                                    vgpus=(1, 2))
+    return out
+
+
+def diamond() -> Workflow:
+    # a -> (b || c) -> d
+    return Workflow(
+        "diamond", ("a", "b", "c", "d"),
+        {s: s for s in ("a", "b", "c", "d")},
+        {"a": ("b", "c"), "b": ("d",), "c": ("d",), "d": ()})
+
+
+def test_dominator_tree_pipeline():
+    wf = PAPER_APPS["image_classification"]
+    idom = dominator_tree(wf)
+    stages = wf.stages
+    assert idom[stages[0]] is None
+    assert idom[stages[1]] == stages[0]
+    assert idom[stages[2]] == stages[1]
+
+
+def test_dominator_tree_diamond():
+    wf = diamond()
+    idom = dominator_tree(wf)
+    assert idom["a"] is None
+    assert idom["b"] == "a" and idom["c"] == "a"
+    assert idom["d"] == "a"          # join dominated by the split, not b/c
+
+
+def test_reduce_chain_diamond_parallel_anl():
+    wf = diamond()
+    anl = {"a": 0.1, "b": 0.3, "c": 0.2, "d": 0.4}
+    chain = reduce_chain(wf, anl)
+    # serialised: a, {b||c}, d
+    assert [u.reduced for u in chain] == [False, True, False]
+    assert chain[1].anl == pytest.approx(0.3)   # max branch sum
+
+
+def test_anl_normalised():
+    wf = PAPER_APPS["expanded_image_classification"]
+    anl = anl_labels(wf, tables_for(wf))
+    assert sum(anl.values()) == pytest.approx(1.0, abs=1e-6)
+    assert all(v > 0 for v in anl.values())
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 5))
+def test_slo_fractions_sum_to_one_along_paths(group_size):
+    for wf in list(PAPER_APPS.values()) + [diamond()]:
+        groups = distribute_slo(wf, tables_for(wf), group_size)
+        assert set(groups) == set(wf.stages)
+        # walk every root->sink path; distinct groups on it sum to ~1
+        def paths(s):
+            succ = wf.edges.get(s, ())
+            if not succ:
+                return [[s]]
+            return [[s] + p for t in succ for p in paths(t)]
+        for root in wf.roots:
+            for path in paths(root):
+                seen, total = set(), 0.0
+                for s in path:
+                    g = groups[s]
+                    if id(g) not in seen:
+                        seen.add(id(g))
+                        total += g.slo_fraction
+                assert total == pytest.approx(1.0, abs=1e-6)
+
+
+def test_group_size_bound():
+    wf = PAPER_APPS["expanded_image_classification"]
+    for g in (1, 2, 3):
+        groups = distribute_slo(wf, tables_for(wf), g)
+        for sg in {id(v): v for v in groups.values()}.values():
+            assert len(sg.stages) <= g

@@ -1,0 +1,97 @@
+"""Cluster-emulator invariants: every job scheduled exactly once, resource
+caps never violated, accounting consistent — for all five schedulers."""
+import numpy as np
+import pytest
+
+from repro.cluster.emulator import ClusterSim
+from repro.cluster.workload import generate
+from repro.core.profiles import PAPER_FUNCTIONS, ProfileTable
+from repro.core.workflows import PAPER_APPS
+from repro.core.scheduler import ESGScheduler
+from repro.core.baselines.infless import INFlessScheduler
+from repro.core.baselines.fastgshare import FaSTGShareScheduler
+from repro.core.baselines.orion import OrionScheduler
+from repro.core.baselines.aquatope import AquatopeScheduler
+
+
+@pytest.fixture(scope="module")
+def tables():
+    return {n: ProfileTable.build(p) for n, p in PAPER_FUNCTIONS.items()}
+
+
+SCHEDS = [ESGScheduler, INFlessScheduler, FaSTGShareScheduler,
+          OrionScheduler, AquatopeScheduler]
+
+
+@pytest.mark.parametrize("sched_cls", SCHEDS, ids=lambda c: c.name)
+def test_all_jobs_complete_once(tables, sched_cls):
+    sim = ClusterSim(PAPER_APPS, tables, PAPER_FUNCTIONS,
+                     sched_cls(PAPER_APPS, tables), seed=0)
+    n = 60
+    generate(sim, "moderate-normal", n, PAPER_FUNCTIONS, seed=1)
+    sim.run()
+    assert len(sim.completed) == n
+    # each instance's every stage ran exactly once
+    stage_runs = {}
+    for t in sim.tasks:
+        for j in t.jobs:
+            key = (j.inst.uid, t.stage)
+            stage_runs[key] = stage_runs.get(key, 0) + 1
+    assert all(v == 1 for v in stage_runs.values())
+    for inst in sim.completed:
+        assert len([1 for (uid, _s) in stage_runs if uid == inst.uid]) == \
+            len(inst.app.stages)
+
+
+def test_resource_caps_never_violated(tables):
+    sim = ClusterSim(PAPER_APPS, tables, PAPER_FUNCTIONS,
+                     ESGScheduler(PAPER_APPS, tables), seed=0)
+    generate(sim, "relaxed-heavy", 80, PAPER_FUNCTIONS, seed=2)
+    sim.run()
+    # replay the task intervals; per-invoker concurrent usage <= capacity
+    events = []
+    for t in sim.tasks:
+        events.append((t.start_ms, t.config.vcpu, t.config.vgpu, t.invoker, 1))
+        events.append((t.end_ms, t.config.vcpu, t.config.vgpu, t.invoker, -1))
+    events.sort()
+    use = {i: [0, 0] for i in range(len(sim.invokers))}
+    for _, c, g, inv, sgn in events:
+        use[inv][0] += sgn * c
+        use[inv][1] += sgn * g
+        assert use[inv][0] <= 16 and use[inv][1] <= 8
+        assert use[inv][0] >= 0 and use[inv][1] >= 0
+
+
+def test_cost_accounting_consistent(tables):
+    sim = ClusterSim(PAPER_APPS, tables, PAPER_FUNCTIONS,
+                     ESGScheduler(PAPER_APPS, tables), seed=0)
+    generate(sim, "strict-light", 40, PAPER_FUNCTIONS, seed=3)
+    sim.run()
+    assert sim.total_cost == pytest.approx(sum(t.cost for t in sim.tasks))
+    assert sim.total_cost > 0
+
+
+def test_batching_respects_queue(tables):
+    sim = ClusterSim(PAPER_APPS, tables, PAPER_FUNCTIONS,
+                     ESGScheduler(PAPER_APPS, tables), seed=0)
+    generate(sim, "relaxed-heavy", 60, PAPER_FUNCTIONS, seed=4)
+    sim.run()
+    assert all(1 <= t.config.batch <= 128 for t in sim.tasks)
+
+
+def test_esg_beats_baselines_moderate(tables):
+    """The paper's headline: highest hit rate at the lowest cost."""
+    results = {}
+    for cls in SCHEDS:
+        sim = ClusterSim(PAPER_APPS, tables, PAPER_FUNCTIONS,
+                         cls(PAPER_APPS, tables), seed=0)
+        generate(sim, "moderate-normal", 120, PAPER_FUNCTIONS, seed=5)
+        sim.run()
+        results[cls.name] = sim.summary()
+    esg = results["ESG"]
+    for name, r in results.items():
+        if name == "ESG":
+            continue
+        assert esg["slo_hit_rate"] >= r["slo_hit_rate"] - 0.05, \
+            f"ESG hit {esg['slo_hit_rate']} < {name} {r['slo_hit_rate']}"
+    assert esg["slo_hit_rate"] > 0.8

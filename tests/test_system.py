@@ -1,0 +1,74 @@
+"""End-to-end behaviour tests: the paper's qualitative claims hold in the
+reproduction (see EXPERIMENTS.md for the quantitative record)."""
+import pytest
+
+from repro.cluster.emulator import ClusterSim
+from repro.cluster.workload import generate, min_config_latency
+from repro.core.profiles import Config, PAPER_FUNCTIONS, ProfileTable
+from repro.core.workflows import PAPER_APPS
+from repro.core.scheduler import ESGScheduler
+from repro.core.baselines.aquatope import AquatopeScheduler
+from repro.core.baselines.orion import OrionScheduler
+
+
+@pytest.fixture(scope="module")
+def tables():
+    return {n: ProfileTable.build(p) for n, p in PAPER_FUNCTIONS.items()}
+
+
+def _run(sched, tables, setting, n=100, seed=0, **kw):
+    sim = ClusterSim(PAPER_APPS, tables, PAPER_FUNCTIONS, sched, seed=seed,
+                     **kw)
+    generate(sim, setting, n, PAPER_FUNCTIONS, seed=seed + 1)
+    sim.run()
+    return sim
+
+
+def test_L_matches_table3_sums(tables):
+    # image_classification L = SR + seg + cls at min config
+    app = PAPER_APPS["image_classification"]
+    L = min_config_latency(app, PAPER_FUNCTIONS)
+    parts = sum(PAPER_FUNCTIONS[f].exec_ms(Config(1, 1, 1))
+                for f in ["super_resolution", "segmentation",
+                          "classification"])
+    assert L == pytest.approx(parts)
+
+
+def test_esg_latency_below_but_close_to_slo(tables):
+    """Fig 7's qualitative claim, relaxed-heavy."""
+    sim = _run(ESGScheduler(PAPER_APPS, tables), tables, "relaxed-heavy")
+    lats = [(i.finish_ms - i.arrival_ms) / i.slo_ms for i in sim.completed]
+    med = sorted(lats)[len(lats) // 2]
+    assert 0.4 < med <= 1.0
+
+
+def test_esg_scheduling_overhead_small(tables):
+    """Fig 10: avg search overhead < 10ms (paper)."""
+    sim = _run(ESGScheduler(PAPER_APPS, tables), tables, "moderate-normal")
+    s = sim.summary()
+    assert s["mean_sched_overhead_ms"] < 25.0
+
+
+def test_static_planners_miss_configs(tables):
+    """Table 4: Aquatope's offline plans miss when queues are shorter than
+    the planned batch."""
+    sim = _run(AquatopeScheduler(PAPER_APPS, tables), tables, "strict-light")
+    assert sim.plan_uses > 0
+    assert sim.config_misses / sim.plan_uses > 0.3
+
+
+def test_prewarming_eliminates_most_cold_starts(tables):
+    warm = _run(ESGScheduler(PAPER_APPS, tables), tables, "moderate-normal")
+    cold = _run(ESGScheduler(PAPER_APPS, tables), tables, "moderate-normal",
+                prewarm=False)
+    assert warm.cold_starts <= cold.cold_starts
+    assert warm.slo_hit_rate() >= cold.slo_hit_rate()
+
+
+def test_adaptivity_beats_static_plan(tables):
+    """ESG re-plans every stage; Orion plans once — under the dynamic
+    moderate-normal setting ESG's hit rate must win."""
+    esg = _run(ESGScheduler(PAPER_APPS, tables), tables, "moderate-normal")
+    orion = _run(OrionScheduler(PAPER_APPS, tables), tables,
+                 "moderate-normal")
+    assert esg.slo_hit_rate() > orion.slo_hit_rate()
