@@ -1,0 +1,94 @@
+"""Scenario sweep: ESG vs baselines across the serving-scenario library.
+
+Runs every (scenario, scheduler) pair through the online serving stack
+(``repro.serving``: trace engine -> gateway admission -> emulator with a
+pluggable warm-pool autoscaler) and prints the telemetry table the paper's
+uniform settings cannot produce: SLO attainment under diurnal swings,
+MMPP bursts, flash crowds and heavy-tailed arrivals, with $/1k requests,
+cold-start and shed counts.
+
+    PYTHONPATH=src python benchmarks/scenario_sweep.py --smoke
+    PYTHONPATH=src python benchmarks/scenario_sweep.py --seed 7 \
+        --schedulers ESG INFless Orion --autoscaler finegrained
+
+Deterministic under --seed (same seed => identical table).
+"""
+from __future__ import annotations
+
+import argparse
+
+from common import PAPER_APPS, ClusterSim, make_scheduler, paper_tables, \
+    write_csv
+from repro.core.profiles import PAPER_FUNCTIONS
+from repro.serving import Gateway, format_table, get_autoscaler, get_scenario
+
+SCENARIO_NAMES = ["uniform-normal", "diurnal", "mmpp", "flash-crowd",
+                  "azure-tail", "skewed-mix"]
+SCHEDULERS = ["ESG", "INFless", "FaST-GShare", "Orion", "Aquatope"]
+
+CSV_COLS = ["scenario", "scheduler", "autoscaler", "injected", "admitted",
+            "shed", "completed", "slo_attainment", "cost_per_1k",
+            "cold_starts", "utilization", "p95_ms"]
+
+
+def run_cell(scenario_name: str, scheduler: str, autoscaler: str,
+             n: int, seed: int, slo_mult: float,
+             count_overhead: bool = False) -> dict:
+    tables = paper_tables()
+    # count_overhead folds *measured wall-clock* search time into simulated
+    # latency (the Fig 9/10 methodology) — off by default here so the sweep
+    # is bit-deterministic under --seed
+    sim = ClusterSim(PAPER_APPS, tables, PAPER_FUNCTIONS,
+                     make_scheduler(scheduler, tables), seed=seed,
+                     autoscaler=get_autoscaler(autoscaler),
+                     count_overhead=count_overhead)
+    gw = Gateway(sim)
+    sc = get_scenario(scenario_name, app_names=list(PAPER_APPS))
+    gw.inject(sc, n, seed=seed + 1, slo_mult=slo_mult)
+    tel = gw.run()
+    tel.scenario = scenario_name
+    return tel.summary()
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="small n / scenario subset for CI")
+    ap.add_argument("--n", type=int, default=None)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--slo-mult", type=float, default=1.0)
+    ap.add_argument("--scenarios", nargs="*", default=None)
+    ap.add_argument("--schedulers", nargs="*", default=None)
+    ap.add_argument("--autoscaler", default="ewma",
+                    choices=["ewma", "finegrained", "none"])
+    ap.add_argument("--count-overhead", action="store_true",
+                    help="fold measured scheduler wall time into latency "
+                         "(Fig 9/10 methodology; breaks bit-determinism)")
+    args = ap.parse_args()
+
+    scenarios = args.scenarios or SCENARIO_NAMES
+    schedulers = args.schedulers or SCHEDULERS
+    n = args.n
+    if args.smoke:
+        scenarios = args.scenarios or ["diurnal", "mmpp", "flash-crowd",
+                                       "azure-tail"]
+        schedulers = args.schedulers or ["ESG", "INFless", "Orion"]
+        n = n or 40
+    n = n or 200
+
+    rows = []
+    for sc in scenarios:
+        for sched in schedulers:
+            s = run_cell(sc, sched, args.autoscaler, n, args.seed,
+                         args.slo_mult, count_overhead=args.count_overhead)
+            rows.append(s)
+    print(format_table(rows))
+    csv_rows = [[r.get(c, r["latency"]["p95_ms"] if c == "p95_ms" else "")
+                 for c in CSV_COLS] for r in rows]
+    path = write_csv("scenario_sweep", CSV_COLS, csv_rows)
+    print(f"\n[scenario-sweep] n={n} seed={args.seed} "
+          f"autoscaler={args.autoscaler} -> {path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -24,7 +24,7 @@ import numpy as np
 
 
 def _flatten(tree) -> list[tuple[str, Any]]:
-    flat, _ = jax.tree.flatten_with_path(tree)
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
     out = []
     for path, leaf in flat:
         name = "/".join(

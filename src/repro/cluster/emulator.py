@@ -5,7 +5,8 @@ driving emulated invokers, with
   * the (vcpu, vgpu) resource lattice per invoker (16 vCPU + 8 vTPU here —
     the TPU-host adaptation of "16 vCPUs + 1 A100 split into 7 MIGs"),
   * cold starts + 10-min keep-alive container pools,
-  * EWMA pre-warming (paper §4),
+  * pluggable warm-pool autoscaling (``repro.serving.autoscaler``; the
+    default ``EwmaPrewarm`` policy is the paper-§4 EWMA pre-warming),
   * the local-vs-remote data-passing model (locality benefit),
   * Gaussian execution noise on top of the profile model,
   * measured scheduling overhead folded into simulated latency (this is
@@ -13,7 +14,10 @@ driving emulated invokers, with
 
 Schedulers plug in via the ``SchedulerPolicy`` protocol; the event loop,
 batching, dispatch bookkeeping, recheck list and accounting are shared so
-comparisons isolate the scheduling algorithm (paper §4.2).
+comparisons isolate the scheduling algorithm (paper §4.2).  Warm-pool
+policies plug in via the ``autoscaler`` argument, and an optional
+``admission`` callback (see ``repro.serving.gateway``) may reject
+arrivals at the door (load shedding).
 """
 from __future__ import annotations
 
@@ -21,6 +25,7 @@ import dataclasses
 import heapq
 import itertools
 import time as _walltime
+import zlib
 from collections import defaultdict, deque
 from typing import Any, Callable, Optional
 
@@ -35,6 +40,13 @@ LOCAL_TRANSFER_MS = 1.0
 REMOTE_TRANSFER_FIXED_MS = 20.0
 REMOTE_TRANSFER_MS_PER_MB = 8.0   # ~125 MB/s remote store
 RECHECK_LIMIT = 3
+
+
+def home_invoker(app_name: str, func: str, n_invokers: int) -> int:
+    """Stable home-invoker choice for a root stage (shared with the
+    autoscalers so seeded warm pools land where placement will look).
+    Builtin str hash is per-process randomised, hence crc32."""
+    return zlib.crc32(f"{app_name}/{func}".encode()) % n_invokers
 
 
 # ---------------------------------------------------------------------------
@@ -155,7 +167,9 @@ class ClusterSim:
                  prewarm: bool = True,
                  batching: bool = True,
                  gpu_sharing: bool = True,
-                 initial_warm: int = 2):
+                 initial_warm: int = 2,
+                 autoscaler: Any = None,
+                 admission: Optional[Callable] = None):
         self.apps = apps
         self.tables = tables
         self.profiles = profiles
@@ -164,7 +178,6 @@ class ClusterSim:
         self.noise_sigma = noise_sigma
         self.rng = np.random.default_rng(seed)
         self.count_overhead = count_overhead
-        self.prewarm_on = prewarm
         self.batching = batching
         self.gpu_sharing = gpu_sharing
 
@@ -174,15 +187,19 @@ class ClusterSim:
         self.queues: dict[tuple[str, str], deque[Job]] = defaultdict(deque)
         self.recheck: dict[tuple[str, str], int] = {}
         self._blocked: set[tuple[str, str]] = set()
-        self.ewma: dict[str, tuple[float, float]] = {}   # func -> (interval, last)
-        if prewarm and initial_warm:
-            for inv in self.invokers:
-                for func in profiles:
-                    for _ in range(initial_warm):
-                        inv.add_warm(func, KEEPALIVE_MS)
+        # warm-pool policy: the legacy prewarm/initial_warm knobs map onto
+        # the default policies; pass ``autoscaler`` to swap in another
+        if autoscaler is None:
+            from repro.serving.autoscaler import EwmaPrewarm, NoPrewarm
+            autoscaler = (EwmaPrewarm(initial_warm=initial_warm) if prewarm
+                          else NoPrewarm())
+        self.autoscaler = autoscaler
+        self.admission = admission    # callable(sim, inst) -> bool, or None
+        self.autoscaler.seed_pools(self)
 
         # metrics
         self.completed: list[AppInstance] = []
+        self.shed: list[AppInstance] = []
         self.total_cost = 0.0
         self.tasks: list[Task] = []
         self.sched_overheads_ms: list[float] = []
@@ -213,11 +230,17 @@ class ClusterSim:
                 func, inv = payload
                 self.invokers[inv].add_warm(func, self.now + KEEPALIVE_MS)
                 self._blocked.clear()
+            elif kind == "autoscale":
+                self.autoscaler.on_tick(self, payload)
+                self._blocked.clear()
             self._schedule_pass()
         return self
 
     # ---- handlers --------------------------------------------------------
     def _on_arrival(self, inst: AppInstance):
+        if self.admission is not None and not self.admission(self, inst):
+            self.shed.append(inst)       # load-shed at the door
+            return
         self.sched.on_arrival(self, inst, self.now)
         for s in inst.app.stages:
             inst.pending_preds[s] = len(inst.app.predecessors(s))
@@ -329,7 +352,7 @@ class ClusterSim:
         preds = app.predecessors(stage)
         order: list[int] = []
         if not preds:
-            order.append(hash((app.name, func)) % n)      # home invoker
+            order.append(home_invoker(app.name, func, n))
         else:
             pred_invs = [j.inst.stage_invoker.get(p)
                          for j in jobs for p in preds]
@@ -381,10 +404,6 @@ class ClusterSim:
         cold = not inv.take_warm(func, self.now)
         if cold:
             self.cold_starts += 1
-            if self.prewarm_on:
-                # reactive scale-up: a cold start signals under-provisioned
-                # capacity — warm an extra container alongside this one
-                inv.add_warm(func, self.now + KEEPALIVE_MS)
         cold_ms = self.profiles[func].cold_ms if cold else 0.0
 
         noise = float(np.clip(
@@ -400,23 +419,10 @@ class ClusterSim:
         task = Task(jobs, stage, func, cfg, inv_idx, start, end, cold, cost)
         self.tasks.append(task)
         self.push_event(end, "complete", task)
-        self._note_prewarm(func, inv_idx)
-
-    # ---- prewarming (EWMA, paper §4) ----------------------------------------
-    def _note_prewarm(self, func: str, inv_idx: int):
-        if not self.prewarm_on:
-            return
-        prev = self.ewma.get(func)
-        if prev is not None:
-            interval, last = prev
-            obs = self.now - last
-            interval = 0.7 * interval + 0.3 * obs
-            self.ewma[func] = (interval, self.now)
-            lead = self.profiles[func].cold_ms
-            when = self.now + max(interval - lead, 0.0)
-            self.push_event(when, "prewarm", (func, inv_idx))
-        else:
-            self.ewma[func] = (1000.0, self.now)
+        # warm-pool policy hook: reactive scale-up / pre-warm scheduling /
+        # scale-down all live in repro.serving.autoscaler
+        self.autoscaler.on_dispatch(self, func, inv_idx, cold,
+                                    cold_ms + exec_ms)
 
     # ---- metrics -------------------------------------------------------------
     def slo_hit_rate(self) -> float:
@@ -433,7 +439,9 @@ class ClusterSim:
             else np.array([0.0])
         return {
             "scheduler": self.sched.name,
+            "autoscaler": getattr(self.autoscaler, "name", "?"),
             "completed": len(self.completed),
+            "shed": len(self.shed),
             "slo_hit_rate": self.slo_hit_rate(),
             "total_cost": self.total_cost,
             "mean_latency_ms": float(lat.mean()),

@@ -27,22 +27,26 @@ SETTINGS = {
 }
 
 
-def min_config_latency(app: Workflow,
-                       profiles: dict[str, FunctionProfile]) -> float:
-    """L — end-to-end time alone at the minimum configuration (1,1,1)."""
-    c = Config(1, 1, 1)
-    # longest path through the DAG
+def critical_path(app: Workflow, stage_time) -> float:
+    """Longest root->sink path with per-stage times from ``stage_time``."""
     memo: dict[str, float] = {}
 
     def longest(stage: str) -> float:
         if stage in memo:
             return memo[stage]
-        t = profiles[app.func_of[stage]].exec_ms(c)
+        t = stage_time(stage)
         succ = app.edges.get(stage, ())
         memo[stage] = t + (max(longest(s) for s in succ) if succ else 0.0)
         return memo[stage]
 
     return max(longest(r) for r in app.roots)
+
+
+def min_config_latency(app: Workflow,
+                       profiles: dict[str, FunctionProfile]) -> float:
+    """L — end-to-end time alone at the minimum configuration (1,1,1)."""
+    c = Config(1, 1, 1)
+    return critical_path(app, lambda s: profiles[app.func_of[s]].exec_ms(c))
 
 
 def generate(sim, setting: str, n_arrivals: int,

@@ -128,7 +128,13 @@ def _parse_module(hlo: str):
                 buf += ch
         if buf.strip():
             args.append(buf.strip())
-        operands = [a.lstrip("%") for a in args if a.startswith("%")]
+        # operands may be bare (%name) or typed (f32[8,64]{1,0} %name)
+        # depending on the XLA dump flavour — pull the %name either way
+        operands = []
+        for a in args:
+            om = re.search(r"%([\w.\-]+)", a)
+            if om:
+                operands.append(om.group(1))
         comps[cur].append(Instr(name, result_text, op, operands, line))
     return comps, params, entry
 

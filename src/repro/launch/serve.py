@@ -45,22 +45,56 @@ ZOO_APPS = {
 }
 
 
+def _make_scheduler(name: str, tables):
+    if name == "esg":
+        return ESGScheduler(ZOO_APPS, tables, risk_sigma=0.05)
+    from repro.core.baselines.aquatope import AquatopeScheduler
+    from repro.core.baselines.fastgshare import FaSTGShareScheduler
+    from repro.core.baselines.infless import INFlessScheduler
+    from repro.core.baselines.orion import OrionScheduler
+    factories = {"infless": INFlessScheduler, "fastgshare": FaSTGShareScheduler,
+                 "orion": OrionScheduler, "aquatope": AquatopeScheduler}
+    return factories[name](ZOO_APPS, tables)
+
+
 def emulate(setting: str = "moderate-normal", n: int = 200, seed: int = 0,
-            scheduler: str = "esg", log=print) -> dict:
+            scheduler: str = "esg", scenario: str | None = None,
+            autoscaler: str | None = None, slo_mult: float = 1.0,
+            log=print) -> dict:
+    """Emulated serving over the model zoo.
+
+    Legacy mode (``scenario=None``) drives the paper's uniform-interval
+    ``setting`` through ``cluster.workload.generate``.  Scenario mode runs
+    the online-serving stack: ``serving.traces`` arrival engine behind the
+    ``serving.gateway`` admission front end, with the warm-pool policy
+    named by ``autoscaler`` (ewma | finegrained | none).
+    """
+    from repro.serving import Gateway, get_autoscaler, get_scenario
+
     tables = zoo_tables()
     profiles = {a: t.fn for a, t in tables.items()}
-    if scheduler == "esg":
-        sched = ESGScheduler(ZOO_APPS, tables, risk_sigma=0.05)
-    else:
-        from repro.core.baselines.infless import INFlessScheduler
-        sched = INFlessScheduler(ZOO_APPS, tables)
-    sim = ClusterSim(ZOO_APPS, tables, profiles, sched, seed=seed)
-    generate(sim, setting, n, profiles, seed=seed + 1)
-    sim.run()
-    s = sim.summary()
-    log(f"[serve-emulate] {s['scheduler']}: hit={s['slo_hit_rate']:.3f} "
-        f"cost=${s['total_cost']:.4f} mean_lat={s['mean_latency_ms']:.0f}ms "
-        f"sched_ovh={s['mean_sched_overhead_ms']:.2f}ms")
+    sched = _make_scheduler(scheduler, tables)
+    scaler = get_autoscaler(autoscaler) if autoscaler else None
+    sim = ClusterSim(ZOO_APPS, tables, profiles, sched, seed=seed,
+                     autoscaler=scaler)
+    if scenario is None:
+        generate(sim, setting, n, profiles, seed=seed + 1)
+        sim.run()
+        s = sim.summary()
+        log(f"[serve-emulate] {s['scheduler']}: hit={s['slo_hit_rate']:.3f} "
+            f"cost=${s['total_cost']:.4f} mean_lat={s['mean_latency_ms']:.0f}ms "
+            f"sched_ovh={s['mean_sched_overhead_ms']:.2f}ms")
+        return s
+    gw = Gateway(sim)
+    sc = get_scenario(scenario, app_names=list(ZOO_APPS))
+    gw.inject(sc, n, seed=seed + 1, slo_mult=slo_mult)
+    tel = gw.run()
+    tel.scenario = scenario
+    s = tel.summary()
+    log(f"[serve-scenario] {scenario}/{s['scheduler']}/{s['autoscaler']}: "
+        f"slo={s['slo_attainment']:.3f} $/1k={s['cost_per_1k']:.4f} "
+        f"cold={s['cold_starts']} shed={s['shed']} "
+        f"p95={s['latency']['p95_ms']:.0f}ms")
     return s
 
 
@@ -152,12 +186,25 @@ def main():
     ap.add_argument("--arch", default="internlm2_1_8b")
     ap.add_argument("--setting", default="moderate-normal")
     ap.add_argument("--n", type=int, default=200)
-    ap.add_argument("--scheduler", default="esg")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--scheduler", default="esg",
+                    choices=["esg", "infless", "fastgshare", "orion",
+                             "aquatope"])
+    from repro.serving.traces import SCENARIOS
+    ap.add_argument("--scenario", default=None, choices=sorted(SCENARIOS),
+                    help="serving scenario; omit for the legacy uniform "
+                         "setting")
+    ap.add_argument("--autoscaler", default=None,
+                    choices=["ewma", "finegrained", "none"],
+                    help="warm-pool policy (default: ewma)")
+    ap.add_argument("--slo-mult", type=float, default=1.0)
     args = ap.parse_args()
     if args.real:
         serve_real(arch=args.arch, n_requests=args.n if args.n else 48)
     else:
-        emulate(args.setting, args.n, scheduler=args.scheduler)
+        emulate(args.setting, args.n, seed=args.seed,
+                scheduler=args.scheduler, scenario=args.scenario,
+                autoscaler=args.autoscaler, slo_mult=args.slo_mult)
 
 
 if __name__ == "__main__":

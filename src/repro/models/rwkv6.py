@@ -68,7 +68,7 @@ def param_specs(cfg: ModelConfig, opts) -> dict:
 
 def init_params(cfg: ModelConfig, key: Array, opts) -> dict:
     specs = param_specs(cfg, opts)
-    flat, _ = jax.tree.flatten_with_path(specs)
+    flat, _ = jax.tree_util.tree_flatten_with_path(specs)
     keys = jax.random.split(key, len(flat))
     out = []
     for (path, spec), kk in zip(flat, keys):

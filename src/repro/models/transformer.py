@@ -144,7 +144,7 @@ def param_specs(cfg: ModelConfig, opts: RunOptions = RunOptions()) -> dict:
 def init_params(cfg: ModelConfig, key: Array,
                 opts: RunOptions = RunOptions()) -> dict:
     specs = param_specs(cfg, opts)
-    flat, treedef = jax.tree.flatten_with_path(specs)
+    flat, treedef = jax.tree_util.tree_flatten_with_path(specs)
     keys = jax.random.split(key, len(flat))
     out = []
     for (path, spec), k in zip(flat, keys):
@@ -342,11 +342,10 @@ def _seq_shard_decode(cfg, opts, q, k_new, v_new, k_cache, v_cache, t, kind):
         return out, kc, vc
 
     cspec = P(bspec, axis, None, None)
-    fn = jax.shard_map(
+    fn = L.shard_map(
         local_fn, mesh=mesh,
         in_specs=(P(bspec), P(bspec), P(bspec), cspec, cspec, P()),
-        out_specs=(P(bspec), cspec, cspec),
-        check_vma=False)
+        out_specs=(P(bspec), cspec, cspec))
     return fn(q, k_new, v_new, k_cache, v_cache, t)
 
 

@@ -1,0 +1,25 @@
+"""Online serving runtime around the cluster emulator.
+
+Modules:
+  * ``traces``     — trace-driven scenario engine (diurnal, MMPP bursts,
+                     flash crowds, heavy-tailed Azure-like arrivals, mixes);
+  * ``autoscaler`` — pluggable warm-pool / vGPU autoscaler policies
+                     (EWMA pre-warm, HAS-GPU-style fine-grained, none);
+  * ``gateway``    — admission-control front end (open-loop injection,
+                     per-app AFW queues, load shedding of doomed requests);
+  * ``telemetry``  — per-stage latency histograms, SLO attainment, cost,
+                     utilization, cold-start and shed counters.
+"""
+from repro.serving.autoscaler import (AUTOSCALERS, AutoscalerPolicy,
+                                      EwmaPrewarm, FineGrained, NoPrewarm,
+                                      get_autoscaler)
+from repro.serving.gateway import Gateway
+from repro.serving.telemetry import LatencyHistogram, Telemetry, format_table
+from repro.serving.traces import (SCENARIOS, Arrival, Scenario, get_scenario)
+
+__all__ = [
+    "AUTOSCALERS", "AutoscalerPolicy", "EwmaPrewarm", "FineGrained",
+    "NoPrewarm", "get_autoscaler", "Gateway", "LatencyHistogram",
+    "Telemetry", "format_table", "SCENARIOS", "Arrival", "Scenario",
+    "get_scenario",
+]

@@ -1,0 +1,219 @@
+"""Pluggable warm-pool / vGPU autoscaler policies.
+
+The cluster emulator used to hard-code its pre-warming behaviour (EWMA
+inter-arrival prediction + reactive warm-on-cold + static initial pools).
+That logic now lives here behind ``AutoscalerPolicy`` so serving runs can
+swap policies without touching the event loop:
+
+  * ``EwmaPrewarm``  — the paper-§4 default, bit-compatible with the old
+    emulator behaviour (initial pools, reactive scale-up on a cold start,
+    EWMA-timed pre-warm events).
+  * ``FineGrained``  — HAS-GPU-style fine-grained scaling: per-function
+    arrival-rate and service-time estimates drive a Little's-law target
+    pool size; surplus containers are retired early (scale-down), deficits
+    are pre-warmed immediately.
+  * ``NoPrewarm``    — cold-start-always baseline (no pools, no events).
+
+Policies interact with the emulator through three hooks:
+  ``seed_pools(sim)``                       once, after invokers exist;
+  ``on_dispatch(sim, func, inv, cold, ms)`` after every task dispatch;
+  ``on_tick(sim, payload)``                 on ``autoscale`` timer events
+                                            the policy scheduled itself.
+Pre-warms are requested by pushing the emulator's generic ``prewarm``
+event; scale-down manipulates invoker pools directly.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+from repro.core.profiles import Config
+
+AUTOSCALERS: dict[str, type] = {}
+
+
+def _register(cls):
+    AUTOSCALERS[cls.name] = cls
+    return cls
+
+
+class AutoscalerPolicy:
+    """Warm-pool policy interface driven by the cluster emulator."""
+    name = "base"
+
+    def seed_pools(self, sim) -> None:
+        """Populate initial warm pools (sim.invokers exist, sim.now == 0)."""
+
+    def on_dispatch(self, sim, func: str, inv_idx: int, cold: bool,
+                    service_ms: float) -> None:
+        """Observe one task dispatch (cold tells whether a warm container
+        was found); schedule pre-warms / scale down as the policy sees fit."""
+
+    def on_tick(self, sim, payload) -> None:
+        """Handle an ``autoscale`` event the policy scheduled earlier."""
+
+    # ---- shared helpers ---------------------------------------------------
+    @staticmethod
+    def warm_count(sim, func: str) -> int:
+        now = sim.now
+        return sum(sum(1 for e in inv.warm[func] if e >= now)
+                   for inv in sim.invokers)
+
+
+@_register
+class NoPrewarm(AutoscalerPolicy):
+    """Every container start is cold; keep-alive reuse still applies."""
+    name = "none"
+
+
+@_register
+class EwmaPrewarm(AutoscalerPolicy):
+    """EWMA inter-arrival pre-warming (paper §4) — the default policy.
+
+    Replicates the emulator's original hard-coded behaviour exactly:
+      * ``initial_warm`` containers per function on every invoker at t=0;
+      * a cold start reactively warms one extra container on that invoker;
+      * per function, an EWMA of the dispatch inter-arrival schedules the
+        next pre-warm ``cold_ms`` ahead of the predicted next request.
+    """
+    name = "ewma"
+
+    def __init__(self, initial_warm: int = 2, alpha: float = 0.3,
+                 bootstrap_interval_ms: float = 1000.0):
+        self.initial_warm = initial_warm
+        self.alpha = alpha
+        self.bootstrap_interval_ms = bootstrap_interval_ms
+        self.ewma: dict[str, tuple[float, float]] = {}  # func -> (interval, last)
+
+    def seed_pools(self, sim):
+        if not self.initial_warm:
+            return
+        from repro.cluster.emulator import KEEPALIVE_MS
+        for inv in sim.invokers:
+            for func in sim.profiles:
+                for _ in range(self.initial_warm):
+                    inv.add_warm(func, KEEPALIVE_MS)
+
+    def on_dispatch(self, sim, func, inv_idx, cold, service_ms):
+        from repro.cluster.emulator import KEEPALIVE_MS
+        if cold:
+            # reactive scale-up: a cold start signals under-provisioned
+            # capacity — warm an extra container alongside this one
+            sim.invokers[inv_idx].add_warm(func, sim.now + KEEPALIVE_MS)
+        prev = self.ewma.get(func)
+        if prev is None:
+            self.ewma[func] = (self.bootstrap_interval_ms, sim.now)
+            return
+        interval, last = prev
+        obs = sim.now - last
+        interval = (1.0 - self.alpha) * interval + self.alpha * obs
+        self.ewma[func] = (interval, sim.now)
+        lead = sim.profiles[func].cold_ms
+        when = sim.now + max(interval - lead, 0.0)
+        sim.push_event(when, "prewarm", (func, inv_idx))
+
+
+@_register
+class FineGrained(AutoscalerPolicy):
+    """HAS-GPU-style fine-grained scale-up/down (arXiv 2505.01968).
+
+    Per function, a sliding window of dispatch timestamps estimates the
+    arrival rate and an EWMA tracks the service time.  Little's law gives
+    the target number of concurrently-needed containers::
+
+        target = ceil(rate * service_ms * headroom)
+
+    Deficits are pre-warmed immediately (spread over the least-loaded
+    invokers); surpluses beyond ``target + slack`` are retired by dropping
+    the latest-expiring warm entries (scale-down) — the lever uniform
+    keep-alive pools lack.
+    """
+    name = "finegrained"
+
+    def __init__(self, window: int = 16, headroom: float = 1.25,
+                 slack: int = 1, initial_warm: int = 1):
+        self.window = window
+        self.headroom = headroom
+        self.slack = slack
+        self.initial_warm = initial_warm
+        self._times: dict[str, list[float]] = {}
+        self._service: dict[str, float] = {}
+        self._pending: dict[str, int] = {}   # prewarms pushed, not yet applied
+
+    def seed_pools(self, sim):
+        if not self.initial_warm:
+            return
+        from repro.cluster.emulator import KEEPALIVE_MS, home_invoker
+        n = len(sim.invokers)
+        seeded = set()
+        # minimal footprint: seed each app's root-stage function on the
+        # home invoker locality placement will actually probe first
+        for app in sim.apps.values():
+            for root in app.roots:
+                func = app.func_of[root]
+                idx = home_invoker(app.name, func, n)
+                if (func, idx) in seeded:
+                    continue
+                seeded.add((func, idx))
+                for _ in range(self.initial_warm):
+                    sim.invokers[idx].add_warm(func, KEEPALIVE_MS)
+
+    def _target(self, sim, func: str) -> Optional[int]:
+        ts = self._times.get(func, ())
+        if len(ts) < 2:
+            return None
+        span = ts[-1] - ts[0]
+        if span <= 0:
+            return None
+        rate = (len(ts) - 1) / span                       # req / ms
+        service = self._service.get(
+            func, sim.profiles[func].exec_ms(Config(1, 1, 1)))
+        return max(1, math.ceil(rate * service * self.headroom))
+
+    def on_dispatch(self, sim, func, inv_idx, cold, service_ms):
+        from repro.cluster.emulator import KEEPALIVE_MS
+        ts = self._times.setdefault(func, [])
+        ts.append(sim.now)
+        if len(ts) > self.window:
+            del ts[0]
+        prev = self._service.get(func)
+        self._service[func] = (service_ms if prev is None
+                               else 0.7 * prev + 0.3 * service_ms)
+        target = self._target(sim, func)
+        if target is None:
+            if cold:  # bootstrap: behave reactively until the window fills
+                sim.invokers[inv_idx].add_warm(func, sim.now + KEEPALIVE_MS)
+            return
+        # count prewarms already in flight (pushed but not yet popped by
+        # the event loop) or same-instant dispatches would re-push the
+        # whole deficit each time and overshoot the target
+        have = self.warm_count(sim, func) + self._pending.get(func, 0)
+        if have < target:
+            # scale up: pre-warm the deficit on the emptiest invokers
+            order = sorted(sim.invokers, key=lambda i: -i.free_vgpu)
+            for j in range(target - have):
+                inv = order[j % len(order)]
+                sim.push_event(sim.now, "autoscale", (func, inv.idx))
+                self._pending[func] = self._pending.get(func, 0) + 1
+        elif have > target + self.slack:
+            # scale down: retire the latest-expiring surplus containers
+            surplus = have - target
+            pools = sorted(
+                ((e, inv) for inv in sim.invokers
+                 for e in inv.warm[func] if e >= sim.now),
+                key=lambda p: -p[0])
+            for e, inv in pools[:surplus]:
+                inv.warm[func].remove(e)
+
+    def on_tick(self, sim, payload):
+        from repro.cluster.emulator import KEEPALIVE_MS
+        func, inv_idx = payload
+        sim.invokers[inv_idx].add_warm(func, sim.now + KEEPALIVE_MS)
+        self._pending[func] = max(self._pending.get(func, 0) - 1, 0)
+
+
+def get_autoscaler(name: str, **kw) -> AutoscalerPolicy:
+    if name not in AUTOSCALERS:
+        raise KeyError(f"unknown autoscaler {name!r}; "
+                       f"have {sorted(AUTOSCALERS)}")
+    return AUTOSCALERS[name](**kw)

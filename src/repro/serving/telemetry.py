@@ -1,0 +1,229 @@
+"""Serving telemetry: per-stage latency histograms, SLO attainment, cost,
+utilization, cold-start and shed counters.
+
+``Telemetry`` is fed from two sides:
+  * the gateway increments injection/admission/shed counters online;
+  * after (or during) a run, ``collect(sim)`` derives per-stage queue/exec
+    histograms, per-app SLO attainment, utilization and cost from the
+    emulator's task log.
+
+``summary()`` returns the structured dict the benchmarks consume;
+``format_table(rows)`` renders a list of such dicts as the human-readable
+sweep table.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import defaultdict
+from typing import Any, Optional
+
+import numpy as np
+
+
+class LatencyHistogram:
+    """Log-bucketed latency histogram (0.01 ms .. ~28 h, 8 buckets/decade).
+
+    Exact values are not retained; percentiles interpolate inside the
+    matched bucket, which is plenty for serving dashboards and keeps the
+    memory footprint O(1) in trace length.
+    """
+
+    def __init__(self, lo_ms: float = 1e-2, hi_ms: float = 1e8,
+                 buckets_per_decade: int = 8):
+        n = int(np.ceil(np.log10(hi_ms / lo_ms) * buckets_per_decade)) + 1
+        self.bounds = lo_ms * 10 ** (np.arange(n) / buckets_per_decade)
+        self.counts = np.zeros(n + 1, dtype=np.int64)
+        self.total = 0.0
+        self.n = 0
+        self.max_ms = 0.0
+
+    def record(self, ms: float):
+        idx = int(np.searchsorted(self.bounds, ms, side="right"))
+        self.counts[idx] += 1
+        self.total += ms
+        self.n += 1
+        self.max_ms = max(self.max_ms, ms)
+
+    @property
+    def mean(self) -> float:
+        return self.total / self.n if self.n else 0.0
+
+    def percentile(self, p: float) -> float:
+        """p in [0, 100]; linear interpolation within the hit bucket."""
+        if not self.n:
+            return 0.0
+        rank = p / 100.0 * self.n
+        cum = np.cumsum(self.counts)
+        idx = int(np.searchsorted(cum, rank, side="left"))
+        idx = min(idx, len(self.counts) - 1)
+        lo = self.bounds[idx - 1] if idx > 0 else 0.0
+        hi = self.bounds[idx] if idx < len(self.bounds) else self.max_ms
+        prev = cum[idx - 1] if idx > 0 else 0
+        frac = (rank - prev) / max(self.counts[idx], 1)
+        return float(lo + (hi - lo) * min(max(frac, 0.0), 1.0))
+
+    def to_dict(self) -> dict[str, float]:
+        return {"n": int(self.n), "mean_ms": self.mean,
+                "p50_ms": self.percentile(50), "p95_ms": self.percentile(95),
+                "p99_ms": self.percentile(99), "max_ms": self.max_ms}
+
+
+@dataclasses.dataclass
+class StageStats:
+    queue: LatencyHistogram = dataclasses.field(default_factory=LatencyHistogram)
+    exec: LatencyHistogram = dataclasses.field(default_factory=LatencyHistogram)
+    jobs: int = 0
+    tasks: int = 0
+    cold: int = 0
+
+
+class Telemetry:
+    """Aggregated serving metrics for one run."""
+
+    def __init__(self):
+        self.injected: dict[str, int] = defaultdict(int)
+        self.admitted: dict[str, int] = defaultdict(int)
+        self.shed: dict[str, int] = defaultdict(int)
+        self.stage: dict[tuple[str, str], StageStats] = defaultdict(StageStats)
+        self.e2e = LatencyHistogram()
+        self.slo_hits = 0
+        self.completed = 0
+        self.cold_starts = 0
+        self.total_cost = 0.0
+        self.gpu_busy_ms = 0.0
+        self.gpu_capacity_ms = 0.0
+        self.horizon_ms = 0.0
+        self.scheduler = ""
+        self.autoscaler = ""
+        self.scenario = ""
+
+    # ---- gateway-side ------------------------------------------------------
+    def on_injected(self, app: str):
+        self.injected[app] += 1
+
+    def on_admitted(self, app: str):
+        self.admitted[app] += 1
+
+    def on_shed(self, app: str):
+        self.shed[app] += 1
+
+    # ---- post-run collection ----------------------------------------------
+    def collect(self, sim) -> "Telemetry":
+        """Derive stage/app metrics from a finished (or paused) ClusterSim."""
+        self.scheduler = sim.sched.name
+        self.autoscaler = getattr(sim.autoscaler, "name", "?")
+        self.cold_starts = sim.cold_starts
+        self.total_cost = sim.total_cost
+        horizon = max((t.end_ms for t in sim.tasks), default=0.0)
+        horizon = max(horizon, max((i.finish_ms for i in sim.completed),
+                                   default=0.0))
+        self.horizon_ms = horizon
+        for t in sim.tasks:
+            key = (t.jobs[0].inst.app.name, t.stage)
+            st = self.stage[key]
+            st.tasks += 1
+            st.jobs += len(t.jobs)
+            st.cold += int(t.cold)
+            st.exec.record(t.end_ms - t.start_ms)
+            for j in t.jobs:
+                st.queue.record(max(t.start_ms - j.ready_ms, 0.0))
+            self.gpu_busy_ms += (t.end_ms - t.start_ms) * t.config.vgpu
+        cap = sum(inv.vgpus for inv in sim.invokers)
+        self.gpu_capacity_ms = cap * horizon
+        for inst in sim.completed:
+            lat = inst.finish_ms - inst.arrival_ms
+            self.e2e.record(lat)
+            self.completed += 1
+            self.slo_hits += int(lat <= inst.slo_ms)
+        return self
+
+    # ---- summaries ---------------------------------------------------------
+    @property
+    def n_injected(self) -> int:
+        return sum(self.injected.values())
+
+    @property
+    def n_shed(self) -> int:
+        return sum(self.shed.values())
+
+    @property
+    def n_admitted(self) -> int:
+        return sum(self.admitted.values())
+
+    def slo_attainment(self) -> float:
+        """Hits over *offered* load: shed requests count as misses."""
+        offered = self.n_injected if self.n_injected else self.completed
+        return self.slo_hits / offered if offered else 0.0
+
+    def cost_per_1k(self) -> float:
+        done = self.completed
+        return self.total_cost / done * 1000.0 if done else 0.0
+
+    def utilization(self) -> float:
+        return (self.gpu_busy_ms / self.gpu_capacity_ms
+                if self.gpu_capacity_ms else 0.0)
+
+    def summary(self) -> dict[str, Any]:
+        return {
+            "scheduler": self.scheduler,
+            "autoscaler": self.autoscaler,
+            "scenario": self.scenario,
+            "injected": self.n_injected,
+            "admitted": self.n_admitted,
+            "shed": self.n_shed,
+            "completed": self.completed,
+            "slo_attainment": self.slo_attainment(),
+            "cost_per_1k": self.cost_per_1k(),
+            "total_cost": self.total_cost,
+            "cold_starts": self.cold_starts,
+            "utilization": self.utilization(),
+            "latency": self.e2e.to_dict(),
+            "per_stage": {
+                f"{app}/{stage}": {
+                    "tasks": st.tasks, "jobs": st.jobs, "cold": st.cold,
+                    "queue": st.queue.to_dict(), "exec": st.exec.to_dict(),
+                }
+                for (app, stage), st in sorted(self.stage.items())
+            },
+            "per_app": {
+                app: {"injected": self.injected[app],
+                      "admitted": self.admitted[app],
+                      "shed": self.shed[app]}
+                for app in sorted(set(self.injected) | set(self.admitted)
+                                  | set(self.shed))
+            },
+        }
+
+
+TABLE_COLS = [
+    ("scenario", "scenario", "{}"),
+    ("scheduler", "sched", "{}"),
+    ("autoscaler", "scaler", "{}"),
+    ("slo_attainment", "slo%", "{:.1%}"),
+    ("cost_per_1k", "$/1k", "{:.4f}"),
+    ("cold_starts", "cold", "{}"),
+    ("shed", "shed", "{}"),
+    ("completed", "done", "{}"),
+    ("utilization", "util", "{:.1%}"),
+    ("p95_ms", "p95_ms", "{:.0f}"),
+]
+
+
+def format_table(rows: list[dict[str, Any]],
+                 extra_cols: Optional[list[tuple[str, str, str]]] = None) -> str:
+    """Render summary dicts (see Telemetry.summary) as an aligned table."""
+    cols = TABLE_COLS + (extra_cols or [])
+    cells = [[hdr for _, hdr, _ in cols]]
+    for r in rows:
+        lat = r.get("latency") or {}
+        flat = {**r, "p95_ms": lat.get("p95_ms", "")}
+        row = []
+        for key, _, fmt in cols:
+            v = flat.get(key, "")
+            row.append(fmt.format(v) if v != "" else "-")
+        cells.append(row)
+    widths = [max(len(c[i]) for c in cells) for i in range(len(cols))]
+    lines = ["  ".join(c.ljust(w) for c, w in zip(row, widths))
+             for row in cells]
+    lines.insert(1, "  ".join("-" * w for w in widths))
+    return "\n".join(lines)

@@ -1,0 +1,240 @@
+"""Trace-driven scenario engine (online-serving workloads).
+
+Generalises ``cluster/workload.py`` beyond the paper's three
+uniform-interval settings into a scenario library.  Every scenario is a
+deterministic function of its seed: ``arrivals(app_names, n, seed)``
+returns the same timestamped request stream on every call, so benchmark
+sweeps and tests are exactly reproducible.
+
+Catalogue (``SCENARIOS``):
+  * ``uniform-{light,normal,heavy}`` — the paper's §4.1 Azure-derived
+    uniform inter-arrival ranges (back-compat with ``workload.generate``).
+  * ``diurnal``     — sinusoid-modulated Poisson process (day/night swing).
+  * ``mmpp``        — 2-state Markov-modulated Poisson process (bursty
+    traffic: quiet state / burst state with geometric dwell times).
+  * ``flash-crowd`` — steady Poisson load with a sudden multi-x spike
+    window (news-event traffic).
+  * ``azure-tail``  — heavy-tailed (Lomax/Pareto-II) inter-arrivals, the
+    shape reported for Azure Functions production traces.
+  * ``skewed-mix``  — uniform arrivals but an 80/20 per-app traffic mix.
+
+Add a scenario by subclassing ``Scenario`` (override ``_interval``) and
+registering a factory in ``SCENARIOS``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Optional, Sequence
+
+import numpy as np
+
+from repro.cluster.workload import INTERVALS_MS
+
+
+@dataclasses.dataclass(frozen=True)
+class Arrival:
+    """One request of the injected trace."""
+    uid: int
+    t_ms: float
+    app: str
+
+
+class Scenario:
+    """Base scenario: i.i.d. or state-dependent inter-arrival generator.
+
+    ``app_weights`` maps app name -> relative traffic share (unknown apps
+    are ignored, missing apps get weight 0 if any weight is given,
+    otherwise the mix is uniform).
+    """
+    name = "base"
+
+    def __init__(self, app_weights: Optional[dict[str, float]] = None):
+        self.app_weights = app_weights
+
+    # ---- subclass hooks ---------------------------------------------------
+    def _reset(self, rng: np.random.Generator, n: int):
+        """Called once per trace before interval generation."""
+
+    def _interval(self, rng: np.random.Generator, i: int, t_ms: float) -> float:
+        """Inter-arrival gap (ms) before request ``i`` at current time."""
+        raise NotImplementedError
+
+    # ---- public API -------------------------------------------------------
+    def arrivals(self, app_names: Sequence[str], n: int,
+                 seed: int = 0) -> list[Arrival]:
+        rng = np.random.default_rng(seed)
+        self._reset(rng, n)
+        probs = self._mix(app_names)
+        t = 0.0
+        out = []
+        for uid in range(n):
+            t += max(float(self._interval(rng, uid, t)), 1e-6)
+            app = app_names[int(rng.choice(len(app_names), p=probs))]
+            out.append(Arrival(uid, t, app))
+        return out
+
+    def _mix(self, app_names: Sequence[str]) -> np.ndarray:
+        if not self.app_weights:
+            return np.full(len(app_names), 1.0 / len(app_names))
+        w = np.array([max(float(self.app_weights.get(a, 0.0)), 0.0)
+                      for a in app_names])
+        if w.sum() <= 0:
+            return np.full(len(app_names), 1.0 / len(app_names))
+        return w / w.sum()
+
+
+class UniformScenario(Scenario):
+    """The paper's uniform-interval setting (workload.py semantics)."""
+    name = "uniform"
+
+    def __init__(self, lo_ms: float, hi_ms: float, **kw):
+        super().__init__(**kw)
+        self.lo_ms, self.hi_ms = lo_ms, hi_ms
+
+    def _interval(self, rng, i, t_ms):
+        return rng.uniform(self.lo_ms, self.hi_ms)
+
+
+class DiurnalScenario(Scenario):
+    """Poisson arrivals whose rate follows a sinusoid (diurnal swing).
+
+    rate(t) = (1/mean_interval) * (1 + amplitude * sin(2*pi*t/period)),
+    sampled via per-arrival exponential gaps at the current rate (a
+    piecewise approximation of inhomogeneous-Poisson thinning that keeps
+    generation O(n) and exactly seeded).
+    """
+    name = "diurnal"
+
+    def __init__(self, mean_interval_ms: float = 30.0, amplitude: float = 0.8,
+                 period_ms: float = 20_000.0, **kw):
+        super().__init__(**kw)
+        assert 0.0 <= amplitude < 1.0
+        self.mean_interval_ms = mean_interval_ms
+        self.amplitude = amplitude
+        self.period_ms = period_ms
+
+    def _interval(self, rng, i, t_ms):
+        rate = (1.0 / self.mean_interval_ms) * (
+            1.0 + self.amplitude * math.sin(2 * math.pi * t_ms / self.period_ms))
+        return rng.exponential(1.0 / max(rate, 1e-9))
+
+
+class MMPPScenario(Scenario):
+    """2-state Markov-modulated Poisson process (quiet / burst).
+
+    Dwell times are geometric in arrival counts: after each arrival the
+    chain flips state with probability ``p_switch``.  The burst state runs
+    ``burst_factor`` x the quiet rate, producing the clustered arrivals
+    uniform settings cannot express.
+    """
+    name = "mmpp"
+
+    def __init__(self, mean_interval_ms: float = 30.0,
+                 burst_factor: float = 8.0, p_switch: float = 0.05, **kw):
+        super().__init__(**kw)
+        self.mean_interval_ms = mean_interval_ms
+        self.burst_factor = burst_factor
+        self.p_switch = p_switch
+        self._state = 0
+
+    def _reset(self, rng, n):
+        self._state = 0
+
+    def _interval(self, rng, i, t_ms):
+        if rng.random() < self.p_switch:
+            self._state = 1 - self._state
+        mean = self.mean_interval_ms
+        if self._state:
+            mean = mean / self.burst_factor
+        return rng.exponential(mean)
+
+
+class FlashCrowdScenario(Scenario):
+    """Steady Poisson load with one ``spike_mult``-x spike window.
+
+    The spike covers arrivals in ``[spike_start_frac, spike_end_frac) * n``
+    (index space so the spike always materialises regardless of n).
+    """
+    name = "flash-crowd"
+
+    def __init__(self, mean_interval_ms: float = 40.0, spike_mult: float = 10.0,
+                 spike_start_frac: float = 0.4, spike_end_frac: float = 0.6,
+                 **kw):
+        super().__init__(**kw)
+        self.mean_interval_ms = mean_interval_ms
+        self.spike_mult = spike_mult
+        self.spike_start_frac = spike_start_frac
+        self.spike_end_frac = spike_end_frac
+        self._n = 0
+
+    def _reset(self, rng, n):
+        self._n = n
+
+    def in_spike(self, i: int) -> bool:
+        return (self.spike_start_frac * self._n <= i
+                < self.spike_end_frac * self._n)
+
+    def _interval(self, rng, i, t_ms):
+        mean = self.mean_interval_ms
+        if self.in_spike(i):
+            mean = mean / self.spike_mult
+        return rng.exponential(mean)
+
+
+class HeavyTailScenario(Scenario):
+    """Heavy-tailed (Lomax / Pareto-II) inter-arrivals, Azure-trace-like.
+
+    ``alpha`` is the tail index (smaller = heavier tail; must be > 1 so the
+    mean exists).  Scale is chosen so the mean inter-arrival equals
+    ``mean_interval_ms``: mean = scale / (alpha - 1).
+    """
+    name = "azure-tail"
+
+    def __init__(self, mean_interval_ms: float = 30.0, alpha: float = 1.5,
+                 **kw):
+        super().__init__(**kw)
+        assert alpha > 1.0
+        self.mean_interval_ms = mean_interval_ms
+        self.alpha = alpha
+
+    def _interval(self, rng, i, t_ms):
+        scale = self.mean_interval_ms * (self.alpha - 1.0)
+        return float(rng.pareto(self.alpha)) * scale
+
+
+def _uniform_factory(load: str) -> Callable[..., Scenario]:
+    lo, hi = INTERVALS_MS[load]
+    return lambda **kw: UniformScenario(lo, hi, **kw)
+
+
+SCENARIOS: dict[str, Callable[..., Scenario]] = {
+    "uniform-light": _uniform_factory("light"),
+    "uniform-normal": _uniform_factory("normal"),
+    "uniform-heavy": _uniform_factory("heavy"),
+    "diurnal": DiurnalScenario,
+    "mmpp": MMPPScenario,
+    "flash-crowd": FlashCrowdScenario,
+    "azure-tail": HeavyTailScenario,
+    "skewed-mix": lambda **kw: UniformScenario(
+        20.0, 33.6, **{"app_weights": None, **kw}),
+}
+
+
+def get_scenario(name: str, app_names: Optional[Sequence[str]] = None,
+                 **overrides) -> Scenario:
+    """Build a scenario by catalogue name.
+
+    ``skewed-mix`` derives an 80/20 split over ``app_names`` when no
+    explicit ``app_weights`` override is given.
+    """
+    if name not in SCENARIOS:
+        raise KeyError(f"unknown scenario {name!r}; "
+                       f"have {sorted(SCENARIOS)}")
+    if name == "skewed-mix" and "app_weights" not in overrides and app_names:
+        hot, rest = app_names[0], app_names[1:]
+        weights = {hot: 0.8}
+        for a in rest:
+            weights[a] = 0.2 / max(len(rest), 1)
+        overrides["app_weights"] = weights
+    return SCENARIOS[name](**overrides)

@@ -1,0 +1,56 @@
+"""Minimal deterministic stand-in for ``hypothesis`` used when the real
+package is not installed (the CI image pins it via requirements-dev.txt;
+the bare runtime image does not ship it).
+
+Only the surface these tests use is provided: ``@given`` over
+``st.integers`` / ``st.floats`` strategies and ``@settings(max_examples,
+deadline)``.  Examples are drawn from a fixed-seed RNG so runs are
+reproducible; there is no shrinking — on failure the raw drawn values
+appear in the assertion traceback.
+"""
+from __future__ import annotations
+
+from types import SimpleNamespace
+
+import numpy as np
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def example(self, rng):
+        return self._draw(rng)
+
+
+def _integers(min_value, max_value):
+    return _Strategy(lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+
+def _floats(min_value, max_value):
+    return _Strategy(lambda rng: float(rng.uniform(min_value, max_value)))
+
+
+strategies = SimpleNamespace(integers=_integers, floats=_floats)
+
+
+def settings(max_examples: int = 20, **_ignored):
+    def deco(fn):
+        fn._max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(*strats):
+    def deco(fn):
+        # no functools.wraps: the wrapper must expose a zero-arg signature
+        # or pytest tries to resolve the drawn params as fixtures
+        def wrapper():
+            n = getattr(wrapper, "_max_examples", 20)
+            rng = np.random.default_rng(0)
+            for _ in range(n):
+                fn(*[s.example(rng) for s in strats])
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        return wrapper
+    return deco

@@ -2,7 +2,11 @@
 dual-blade pruning does not compromise quality), via hypothesis."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                      # optional dep: fall back to the
+    from _hypothesis_fallback import (   # vendored deterministic sampler
+        given, settings, strategies as st)
 
 from repro.core.astar import PathResult, SearchStats, brute_force, esg_1q
 from repro.core.profiles import Config, FunctionProfile, ProfileTable

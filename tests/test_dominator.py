@@ -1,7 +1,11 @@
 """Dominator tree + SLO distribution invariants (incl. DAGs w/ splits)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                      # optional dep: fall back to the
+    from _hypothesis_fallback import (   # vendored deterministic sampler
+        given, settings, strategies as st)
 
 from repro.core.dominator import (anl_labels, distribute_slo, dominator_tree,
                                   reduce_chain)
