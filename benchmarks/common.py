@@ -36,16 +36,35 @@ def make_scheduler(name: str, tables, **kw):
 
 
 def run_setting(name: str, setting: str, n: int = N_DEFAULT, seed: int = 0,
-                tables=None, sched=None, **sim_kw) -> dict:
+                tables=None, sched=None, scenario: str | None = None,
+                **sim_kw) -> dict:
+    """One (scheduler, SLO-setting) emulation run.
+
+    ``scenario`` swaps the paper's uniform-interval arrival process for a
+    named ``repro.serving.traces`` scenario (diurnal, mmpp, flash-crowd,
+    azure-tail, trace-replay, ...) while keeping the setting's SLO
+    multiplier — so every paper figure can be regenerated per scenario."""
     tables = tables or paper_tables()
     sched = sched or make_scheduler(name, tables)
     sim = ClusterSim(PAPER_APPS, tables, PAPER_FUNCTIONS, sched,
                      seed=seed, **sim_kw)
-    generate(sim, setting, n, PAPER_FUNCTIONS, seed=seed + 1)
+    if scenario is None:
+        generate(sim, setting, n, PAPER_FUNCTIONS, seed=seed + 1)
+    else:
+        from repro.cluster.workload import SETTINGS, SLO_MULT, \
+            min_config_latency
+        from repro.serving import get_scenario
+        mult = SLO_MULT[SETTINGS[setting][0]]
+        slos = {a: mult * min_config_latency(sim.apps[a], PAPER_FUNCTIONS)
+                for a in sim.apps}
+        sc = get_scenario(scenario, app_names=list(sim.apps))
+        for arr in sc.arrivals(list(sim.apps), n, seed=seed + 1):
+            sim.add_arrival(arr.app, arr.t_ms, slos[arr.app], arr.uid)
     t0 = time.time()
     sim.run()
     out = sim.summary()
     out["setting"] = setting
+    out["scenario"] = scenario or "uniform"
     out["wall_s"] = time.time() - t0
     out["per_app"] = per_app_stats(sim)
     return out

@@ -1,22 +1,31 @@
 """Fig 6 + Fig 8: SLO hit rate and cost (normalised to ESG) per setting,
-overall and per application, for all five schedulers."""
+overall and per application, for all five schedulers.
+
+``--scenario`` regenerates the figure under any serving scenario from
+``repro.serving.traces`` (diurnal, mmpp, flash-crowd, azure-tail,
+trace-replay, ...) instead of the paper's uniform arrivals; the CSV is
+suffixed with the scenario name so per-scenario figures coexist."""
 from __future__ import annotations
 
-import time
+import argparse
 
-from benchmarks import common
+try:
+    from benchmarks import common
+except ImportError:              # script-style: benchmarks/ is sys.path[0]
+    import common
 
 SCHEDULERS = ["ESG", "INFless", "FaST-GShare", "Orion", "Aquatope"]
 
 
-def run(n: int = common.N_DEFAULT, seed: int = 0, log=print) -> list[dict]:
+def run(n: int = common.N_DEFAULT, seed: int = 0, log=print,
+        scenario: str | None = None) -> list[dict]:
     rows, out = [], []
     for setting in common.SETTINGS:
         tables = common.paper_tables()
         esg_cost = None
         for name in SCHEDULERS:
             r = common.run_setting(name, setting, n=n, seed=seed,
-                                   tables=tables)
+                                   tables=tables, scenario=scenario)
             if name == "ESG":
                 esg_cost = r["total_cost"]
             r["norm_cost"] = r["total_cost"] / esg_cost if esg_cost else 0.0
@@ -33,12 +42,25 @@ def run(n: int = common.N_DEFAULT, seed: int = 0, log=print) -> list[dict]:
                 rows.append([f"{setting}/app:{app}", name,
                              f"{st['hit_rate']:.4f}", "", "",
                              f"{st['mean_ms']:.1f}", ""])
-    common.write_csv("fig6_fig8_endtoend",
+    suffix = f"_{scenario}" if scenario else ""
+    common.write_csv(f"fig6_fig8_endtoend{suffix}",
                      ["setting", "scheduler", "slo_hit_rate", "total_cost",
                       "cost_norm_to_esg", "mean_latency_ms",
                       "mean_sched_overhead_ms"], rows)
     return out
 
 
+def main():
+    from repro.serving.traces import SCENARIOS
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--n", type=int, default=common.N_DEFAULT)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--scenario", default=None, choices=sorted(SCENARIOS),
+                    help="serving scenario; omit for the paper's uniform "
+                         "arrivals")
+    args = ap.parse_args()
+    run(n=args.n, seed=args.seed, scenario=args.scenario)
+
+
 if __name__ == "__main__":
-    run()
+    main()

@@ -1,26 +1,47 @@
-"""Fig 7: per-application end-to-end latency distributions (relaxed-heavy)."""
+"""Fig 7: per-application end-to-end latency distributions (relaxed-heavy).
+
+``--scenario`` regenerates the figure under any serving scenario from
+``repro.serving.traces`` instead of the paper's uniform arrivals."""
 from __future__ import annotations
 
-from benchmarks import common
-from benchmarks.fig6_endtoend import SCHEDULERS
+import argparse
+
+try:
+    from benchmarks import common
+    from benchmarks.fig6_endtoend import SCHEDULERS
+except ImportError:              # script-style: benchmarks/ is sys.path[0]
+    import common
+    from fig6_endtoend import SCHEDULERS
 
 
-def run(n: int = common.N_DEFAULT, seed: int = 0, log=print):
+def run(n: int = common.N_DEFAULT, seed: int = 0, log=print,
+        scenario: str | None = None):
     rows = []
     tables = common.paper_tables()
     for name in SCHEDULERS:
         r = common.run_setting(name, "relaxed-heavy", n=n, seed=seed,
-                               tables=tables)
+                               tables=tables, scenario=scenario)
         for app, st in r["per_app"].items():
             rows.append([name, app, f"{st['mean_ms']:.1f}",
                          f"{st['p95_ms']:.1f}", f"{st['hit_rate']:.4f}"])
             log(f"  {name:12s} {app:32s} mean={st['mean_ms']:7.0f}ms "
                 f"p95={st['p95_ms']:7.0f}ms hit={st['hit_rate']:.2f}")
-    common.write_csv("fig7_latency",
+    suffix = f"_{scenario}" if scenario else ""
+    common.write_csv(f"fig7_latency{suffix}",
                      ["scheduler", "app", "mean_ms", "p95_ms", "hit_rate"],
                      rows)
     return rows
 
 
+def main():
+    from repro.serving.traces import SCENARIOS
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--n", type=int, default=common.N_DEFAULT)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--scenario", default=None, choices=sorted(SCENARIOS))
+    args = ap.parse_args()
+    run(n=args.n, seed=args.seed, scenario=args.scenario)
+
+
 if __name__ == "__main__":
-    run()
+    main()

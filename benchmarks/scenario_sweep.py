@@ -23,7 +23,7 @@ from repro.core.profiles import PAPER_FUNCTIONS
 from repro.serving import Gateway, format_table, get_autoscaler, get_scenario
 
 SCENARIO_NAMES = ["uniform-normal", "diurnal", "mmpp", "flash-crowd",
-                  "azure-tail", "skewed-mix"]
+                  "azure-tail", "skewed-mix", "trace-replay"]
 SCHEDULERS = ["ESG", "INFless", "FaST-GShare", "Orion", "Aquatope"]
 
 CSV_COLS = ["scenario", "scheduler", "autoscaler", "injected", "admitted",
@@ -33,7 +33,8 @@ CSV_COLS = ["scenario", "scheduler", "autoscaler", "injected", "admitted",
 
 def run_cell(scenario_name: str, scheduler: str, autoscaler: str,
              n: int, seed: int, slo_mult: float,
-             count_overhead: bool = False) -> dict:
+             count_overhead: bool = False, hbm_mb: float | None = None,
+             trace_csv: str | None = None) -> dict:
     tables = paper_tables()
     # count_overhead folds *measured wall-clock* search time into simulated
     # latency (the Fig 9/10 methodology) — off by default here so the sweep
@@ -41,13 +42,23 @@ def run_cell(scenario_name: str, scheduler: str, autoscaler: str,
     sim = ClusterSim(PAPER_APPS, tables, PAPER_FUNCTIONS,
                      make_scheduler(scheduler, tables), seed=seed,
                      autoscaler=get_autoscaler(autoscaler),
-                     count_overhead=count_overhead)
+                     count_overhead=count_overhead,
+                     hbm_per_vgpu_mb=hbm_mb)
     gw = Gateway(sim)
-    sc = get_scenario(scenario_name, app_names=list(PAPER_APPS))
+    kw = {"csv_path": trace_csv} if (
+        scenario_name == "trace-replay" and trace_csv) else {}
+    sc = get_scenario(scenario_name, app_names=list(PAPER_APPS), **kw)
     gw.inject(sc, n, seed=seed + 1, slo_mult=slo_mult)
     tel = gw.run()
     tel.scenario = scenario_name
     return tel.summary()
+
+
+def rows_to_csv(rows: list[dict], cols: list[str]) -> list[list]:
+    """Flatten telemetry summary dicts into CSV cells (``p95_ms`` is
+    pulled out of the nested latency histogram)."""
+    return [[r.get(c, r["latency"]["p95_ms"] if c == "p95_ms" else "")
+             for c in cols] for r in rows]
 
 
 def main():
@@ -60,7 +71,12 @@ def main():
     ap.add_argument("--scenarios", nargs="*", default=None)
     ap.add_argument("--schedulers", nargs="*", default=None)
     ap.add_argument("--autoscaler", default="ewma",
-                    choices=["ewma", "finegrained", "none"])
+                    choices=["ewma", "finegrained", "vertical", "none"])
+    ap.add_argument("--hbm-mb", type=float, default=None,
+                    help="finite HBM per vGPU (MB) to exercise the "
+                         "hot/warm swap tiers; default unbounded")
+    ap.add_argument("--trace-csv", default=None,
+                    help="CSV for trace-replay (default: built-in sample)")
     ap.add_argument("--count-overhead", action="store_true",
                     help="fold measured scheduler wall time into latency "
                          "(Fig 9/10 methodology; breaks bit-determinism)")
@@ -80,12 +96,11 @@ def main():
     for sc in scenarios:
         for sched in schedulers:
             s = run_cell(sc, sched, args.autoscaler, n, args.seed,
-                         args.slo_mult, count_overhead=args.count_overhead)
+                         args.slo_mult, count_overhead=args.count_overhead,
+                         hbm_mb=args.hbm_mb, trace_csv=args.trace_csv)
             rows.append(s)
     print(format_table(rows))
-    csv_rows = [[r.get(c, r["latency"]["p95_ms"] if c == "p95_ms" else "")
-                 for c in CSV_COLS] for r in rows]
-    path = write_csv("scenario_sweep", CSV_COLS, csv_rows)
+    path = write_csv("scenario_sweep", CSV_COLS, rows_to_csv(rows, CSV_COLS))
     print(f"\n[scenario-sweep] n={n} seed={args.seed} "
           f"autoscaler={args.autoscaler} -> {path}")
 

@@ -1,0 +1,120 @@
+"""vGPU granularity sweep: container-granularity vs fractional vertical
+scaling on the shareable-GPU device model.
+
+For each serving scenario (the PR-1 library + trace replay) the sweep
+runs the same trace through the same scheduler under three warm-pool /
+quota regimes:
+
+  * ``ewma``        — paper-§4 EWMA pre-warming, whole containers only;
+  * ``container``   — HAS-GPU-style fine-grained pool sizing
+                      (``finegrained``), still whole containers;
+  * ``fractional``  — ``vertical``: same pool sizing *plus* fractional
+                      vGPU resizing of running pools (grow into idle
+                      slices, shrink under congestion).
+
+Invokers carry finite HBM (``--hbm-mb`` per vGPU) so the two-tier warm
+state matters: the table reports swap-ins and demotions next to SLO
+attainment, $/1k requests and resize counts.  The point of the figure:
+``fractional`` should beat ``container`` on SLO attainment and/or $-cost
+on at least the bursty scenarios — the vertical lever converts idle
+slices into early finishes and converts queued bursts into admissible
+work.
+
+    PYTHONPATH=src python benchmarks/vgpu_sweep.py --smoke
+    PYTHONPATH=src python benchmarks/vgpu_sweep.py --seed 7 \
+        --scenarios flash-crowd mmpp --scheduler ESG
+
+Deterministic under --seed (same seed => identical table).
+"""
+from __future__ import annotations
+
+import argparse
+
+import scenario_sweep
+from common import write_csv
+from repro.serving import format_table
+
+SCENARIO_NAMES = ["uniform-normal", "diurnal", "mmpp", "flash-crowd",
+                  "azure-tail", "trace-replay"]
+MODES = {"ewma": "ewma", "container": "finegrained", "fractional": "vertical"}
+
+CSV_COLS = ["scenario", "mode", "autoscaler", "slo_attainment", "cost_per_1k",
+            "completed", "shed", "cold_starts", "swap_ins", "demotions",
+            "resizes_up", "resizes_down", "utilization", "p95_ms"]
+
+EXTRA_TABLE_COLS = [("mode", "mode", "{}"),
+                    ("swaps", "swaps", "{}"),
+                    ("resizes", "resz", "{}")]
+
+
+def run_cell(scenario_name: str, mode: str, scheduler: str, n: int,
+             seed: int, slo_mult: float, hbm_mb: float,
+             trace_csv: str | None = None) -> dict:
+    s = scenario_sweep.run_cell(scenario_name, scheduler, MODES[mode],
+                                n, seed, slo_mult, hbm_mb=hbm_mb,
+                                trace_csv=trace_csv)
+    s["mode"] = mode
+    for k in ("swap_ins", "demotions", "resizes_up", "resizes_down"):
+        s[k] = s["gpu"][k]
+    s["swaps"] = s["swap_ins"]
+    s["resizes"] = s["resizes_up"] + s["resizes_down"]
+    return s
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="small n / scenario subset for CI")
+    ap.add_argument("--n", type=int, default=None)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--slo-mult", type=float, default=1.0)
+    ap.add_argument("--hbm-mb", type=float, default=1024.0,
+                    help="HBM per vGPU slice-unit (MB); finite so the "
+                         "hot/warm swap tiers are exercised")
+    ap.add_argument("--scenarios", nargs="*", default=None)
+    ap.add_argument("--scheduler", default="ESG")
+    ap.add_argument("--trace-csv", default=None,
+                    help="CSV for trace-replay (default: built-in sample)")
+    args = ap.parse_args()
+
+    scenarios = args.scenarios or SCENARIO_NAMES
+    n = args.n
+    if args.smoke:
+        scenarios = args.scenarios or ["flash-crowd", "mmpp"]
+        n = n or 40
+    n = n or 200
+
+    rows, by_cell = [], {}
+    for sc in scenarios:
+        for mode in MODES:
+            s = run_cell(sc, mode, args.scheduler, n, args.seed,
+                         args.slo_mult, args.hbm_mb, args.trace_csv)
+            rows.append(s)
+            by_cell[(sc, mode)] = s
+    print(format_table(rows, extra_cols=EXTRA_TABLE_COLS))
+
+    wins = []
+    for sc in scenarios:
+        f, c = by_cell[(sc, "fractional")], by_cell[(sc, "container")]
+        better_slo = f["slo_attainment"] > c["slo_attainment"] + 1e-9
+        cheaper = f["cost_per_1k"] < c["cost_per_1k"] - 1e-9
+        if better_slo or cheaper:
+            wins.append(sc)
+        print(f"[vgpu-sweep] {sc:14s} fractional vs container: "
+              f"slo {f['slo_attainment']:.3f} vs {c['slo_attainment']:.3f}, "
+              f"$/1k {f['cost_per_1k']:.4f} vs {c['cost_per_1k']:.4f} "
+              f"{'WIN' if better_slo or cheaper else '-'}")
+    verdict = (f"fractional beats container on {len(wins)}/{len(scenarios)} "
+               f"scenarios: {wins}" if wins else
+               "fractional did not beat container anywhere (unexpected)")
+    print(f"[vgpu-sweep] {verdict}")
+
+    path = write_csv("vgpu_sweep", CSV_COLS,
+                     scenario_sweep.rows_to_csv(rows, CSV_COLS))
+    print(f"[vgpu-sweep] n={n} seed={args.seed} hbm={args.hbm_mb:.0f}MB/vGPU "
+          f"-> {path}")
+    return 0 if wins else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -5,7 +5,8 @@ combinations and prints the telemetry each produces:
 
   1. a diurnal day/night load curve under the default EWMA pre-warmer;
   2. a flash crowd with no pre-warming at all (every burst pays cold
-     starts) vs the HAS-GPU-style fine-grained autoscaler — the
+     starts) vs the HAS-GPU-style fine-grained autoscaler vs its
+     vertical variant (fractional vGPU resizing of running pools) — the
      cold-start column is the whole story;
   3. a heavy-tailed (Azure-like) trace with a tight SLO so the gateway's
      load shedding engages.
@@ -29,6 +30,8 @@ def main():
                         autoscaler="none", log=print))
     rows.append(emulate(scenario="flash-crowd", n=N, seed=SEED,
                         autoscaler="finegrained", log=print))
+    rows.append(emulate(scenario="flash-crowd", n=N, seed=SEED,
+                        autoscaler="vertical", log=print))
 
     print("\n== heavy-tailed arrivals, strict SLO (shedding engages) ==")
     rows.append(emulate(scenario="azure-tail", n=N, seed=SEED,

@@ -34,6 +34,7 @@ import numpy as np
 from repro.core.profiles import (Config, FunctionProfile, ProfileTable,
                                  VCPU_PRICE_PER_H, VGPU_PRICE_PER_H)
 from repro.core.workflows import Workflow
+from repro.gpu import COLD, DeviceModel, SLICES_PER_VGPU, WARM, swap_in_ms
 
 KEEPALIVE_MS = 600_000.0          # OpenWhisk 10-minute keep-alive
 LOCAL_TRANSFER_MS = 1.0
@@ -87,46 +88,60 @@ class Task:
     end_ms: float
     cold: bool
     cost: float
+    # --- device-model bookkeeping (fractional vGPU + swap tiers) ---
+    tid: int = -1                # index into sim.tasks
+    tier: str = COLD             # warm-state tier paid at start (hot/warm/cold)
+    alloc_id: int = -1           # DeviceModel allocation id while running
+    quota_slices: int = 0        # current compute quota (slices)
+    exec_start_ms: float = 0.0   # start + cold/swap penalty
+    dispatch_ms: float = 0.0     # sim time the allocation was taken
+    gen: int = 0                 # resize generation (stale-event guard)
+    q_since: float = 0.0         # quota unchanged since (slice-ms account)
+
+    @property
+    def quota_vgpu(self) -> float:
+        return self.quota_slices / SLICES_PER_VGPU
 
 
 # ---------------------------------------------------------------------------
 # Invokers
 # ---------------------------------------------------------------------------
 class Invoker:
-    def __init__(self, idx: int, vcpus: int, vgpus: int):
+    """One emulated host: a vCPU counter plus a sliceable accelerator
+    (``repro.gpu.DeviceModel``) carrying the fractional-quota lattice,
+    HBM accounting and two-tier keep-alive pools.  ``footprints`` maps
+    function name -> model-weight MB (0 for unknown functions)."""
+
+    def __init__(self, idx: int, vcpus: int, vgpus: int,
+                 hbm_per_vgpu_mb: Optional[float] = None,
+                 footprints: Optional[dict[str, float]] = None):
         self.idx = idx
         self.vcpus = vcpus
         self.vgpus = vgpus
         self.free_vcpu = vcpus
-        self.free_vgpu = vgpus
-        self.warm: dict[str, list[float]] = defaultdict(list)  # expiry times
+        self.footprints = footprints or {}
+        self.device = DeviceModel(vgpus, hbm_per_vgpu_mb=hbm_per_vgpu_mb)
 
-    def fits(self, c: Config) -> bool:
-        return self.free_vcpu >= c.vcpu and self.free_vgpu >= c.vgpu
+    @property
+    def free_vgpu(self) -> float:
+        """Free accelerator share in vGPU units (fractional once running
+        pools have been vertically resized)."""
+        return self.device.free_slices / SLICES_PER_VGPU
 
-    def alloc(self, c: Config):
-        self.free_vcpu -= c.vcpu
-        self.free_vgpu -= c.vgpu
+    def model_mb(self, func: str) -> float:
+        return self.footprints.get(func, 0.0)
 
-    def release(self, c: Config):
-        self.free_vcpu += c.vcpu
-        self.free_vgpu += c.vgpu
+    def fits(self, c: Config, func: Optional[str] = None,
+             now: float = 0.0) -> bool:
+        return self.free_vcpu >= c.vcpu and self.device.fits(
+            c.vgpu * SLICES_PER_VGPU,
+            self.model_mb(func) if func else 0.0, func, now)
 
-    def take_warm(self, func: str, now: float) -> bool:
-        pool = self.warm[func]
-        while pool and pool[0] < now:
-            pool.pop(0)               # expired keep-alive
-        if pool:
-            pool.pop(0)
-            return True
-        return False
-
-    def add_warm(self, func: str, expiry: float):
-        self.warm[func].append(expiry)
-        self.warm[func].sort()
+    def add_warm(self, func: str, expiry: float, now: float = 0.0):
+        self.device.add_warm(func, expiry, self.model_mb(func), now)
 
     def has_warm(self, func: str, now: float) -> bool:
-        return any(e >= now for e in self.warm[func])
+        return self.device.has_warm(func, now)
 
 
 # ---------------------------------------------------------------------------
@@ -169,12 +184,18 @@ class ClusterSim:
                  gpu_sharing: bool = True,
                  initial_warm: int = 2,
                  autoscaler: Any = None,
-                 admission: Optional[Callable] = None):
+                 admission: Optional[Callable] = None,
+                 hbm_per_vgpu_mb: Optional[float] = None):
         self.apps = apps
         self.tables = tables
         self.profiles = profiles
         self.sched = scheduler
-        self.invokers = [Invoker(i, vcpus, vgpus) for i in range(n_invokers)]
+        footprints = {n: getattr(p, "model_mb", 0.0)
+                      for n, p in profiles.items()}
+        self.invokers = [Invoker(i, vcpus, vgpus,
+                                 hbm_per_vgpu_mb=hbm_per_vgpu_mb,
+                                 footprints=footprints)
+                         for i in range(n_invokers)]
         self.noise_sigma = noise_sigma
         self.rng = np.random.default_rng(seed)
         self.count_overhead = count_overhead
@@ -207,6 +228,10 @@ class ClusterSim:
         self.remote_transfers = 0
         self.config_misses = 0        # pre-planned config infeasible (Table 4)
         self.plan_uses = 0
+        # device-model metrics
+        self.running: dict[int, Task] = {}   # tid -> in-flight task
+        self.resizes: list[tuple] = []       # (t, invoker, tid, old, new)
+        self.slice_busy_ms = 0.0             # integral of quota over time
 
     # ---- events ----------------------------------------------------------
     def push_event(self, t: float, kind: str, payload: Any):
@@ -224,11 +249,15 @@ class ClusterSim:
             if kind == "arrival":
                 self._on_arrival(payload)
             elif kind == "complete":
-                self._on_complete(payload)
+                task, gen = payload
+                if gen != task.gen:
+                    continue             # stale: task was resized since
+                self._on_complete(task)
                 self._blocked.clear()        # capacity changed: retry queues
             elif kind == "prewarm":
                 func, inv = payload
-                self.invokers[inv].add_warm(func, self.now + KEEPALIVE_MS)
+                self.invokers[inv].add_warm(func, self.now + KEEPALIVE_MS,
+                                            self.now)
                 self._blocked.clear()
             elif kind == "autoscale":
                 self.autoscaler.on_tick(self, payload)
@@ -251,8 +280,13 @@ class ClusterSim:
 
     def _on_complete(self, task: Task):
         inv = self.invokers[task.invoker]
-        inv.release(task.config)
-        inv.add_warm(task.func, self.now + KEEPALIVE_MS)
+        inv.free_vcpu += task.config.vcpu
+        # container returns to the keep-alive pool *hot*: weights stay in
+        # HBM until expiry or demotion under memory pressure
+        inv.device.stop(task.alloc_id, self.now + KEEPALIVE_MS)
+        self.slice_busy_ms += task.quota_slices * max(
+            self.now - task.q_since, 0.0)
+        self.running.pop(task.tid, None)
         for job in task.jobs:
             inst = job.inst
             inst.stage_invoker[task.stage] = task.invoker
@@ -267,6 +301,9 @@ class ClusterSim:
                     skey = (inst.app.name, s)
                     self.queues[skey].append(Job(inst, s, self.now))
                     self._blocked.discard(skey)
+        # policy hook *after* successors are queued so the autoscaler sees
+        # the true backlog (vertical policies grow idle pools here)
+        self.autoscaler.on_complete(self, task)
 
     # ---- scheduling pass ---------------------------------------------------
     def _schedule_pass(self):
@@ -314,22 +351,32 @@ class ClusterSim:
             cheapest = tbl.configs[int(np.argmin(tbl.job_costs))]
             candidates = (candidates or []) + [cheapest, Config(1, 1, 1)]
 
-        for cfg in candidates:
-            if not self.batching:
-                cfg = Config(1, cfg.vcpu, cfg.vgpu)
-            if not self.gpu_sharing:
-                cfg = Config(cfg.batch, cfg.vcpu, self.invokers[0].vgpus)
-            miss = cfg.batch > len(jobs)
-            cfg = Config(min(cfg.batch, len(jobs)), cfg.vcpu, cfg.vgpu)
-            inv = self._place(app, stage, jobs[: cfg.batch], cfg)
-            if inv is not None:
-                if getattr(self.sched, "static_plan", False):
-                    self.plan_uses += 1
-                    self.config_misses += int(miss)
-                self._dispatch(key, jobs[: cfg.batch], cfg, inv,
-                               overhead_charge)
-                self.recheck.pop(key, None)
-                return True
+        def attempt() -> bool:
+            for cfg in candidates:
+                if not self.batching:
+                    cfg = Config(1, cfg.vcpu, cfg.vgpu)
+                if not self.gpu_sharing:
+                    cfg = Config(cfg.batch, cfg.vcpu, self.invokers[0].vgpus)
+                miss = cfg.batch > len(jobs)
+                cfg = Config(min(cfg.batch, len(jobs)), cfg.vcpu, cfg.vgpu)
+                inv = self._place(app, stage, jobs[: cfg.batch], cfg)
+                if inv is not None:
+                    if getattr(self.sched, "static_plan", False):
+                        self.plan_uses += 1
+                        self.config_misses += int(miss)
+                    self._dispatch(key, jobs[: cfg.batch], cfg, inv,
+                                   overhead_charge)
+                    self.recheck.pop(key, None)
+                    return True
+            return False
+
+        if attempt():
+            return True
+        # congestion hook: a vertical autoscaler may shrink the quotas of
+        # running pools to make room, then the placement is retried once
+        if self.autoscaler.on_congestion(self, app, stage, candidates) \
+                and attempt():
+            return True
         self.recheck[key] = self.recheck.get(key, 0) + 1
         self._blocked.add(key)
         return False
@@ -343,7 +390,7 @@ class ClusterSim:
             # best-fit: minimise leftover GPU after placement (INFless/FaST)
             best, best_left = None, None
             for inv in self.invokers:
-                if inv.fits(cfg):
+                if inv.fits(cfg, func, self.now):
                     left = inv.free_vgpu - cfg.vgpu
                     if best_left is None or left < best_left:
                         best, best_left = inv.idx, left
@@ -361,16 +408,16 @@ class ClusterSim:
                 vals, counts = np.unique(pred_invs, return_counts=True)
                 order.extend(int(v) for v in vals[np.argsort(-counts)])
         for idx in order:
-            if self.invokers[idx].fits(cfg):
+            if self.invokers[idx].fits(cfg, func, self.now):
                 return idx
         # other warm invokers
         warm = [i for i in self.invokers
-                if i.has_warm(func, self.now) and i.fits(cfg)
+                if i.has_warm(func, self.now) and i.fits(cfg, func, self.now)
                 and i.idx not in order]
         if warm:
             return max(warm, key=lambda i: (i.free_vgpu, i.free_vcpu)).idx
         # cold invoker with most available resources
-        cold = [i for i in self.invokers if i.fits(cfg)]
+        cold = [i for i in self.invokers if i.fits(cfg, func, self.now)]
         if cold:
             return max(cold, key=lambda i: (i.free_vgpu, i.free_vcpu)).idx
         return None
@@ -401,28 +448,82 @@ class ClusterSim:
                         transfer, REMOTE_TRANSFER_FIXED_MS +
                         REMOTE_TRANSFER_MS_PER_MB * self.profiles[func].input_mb)
 
-        cold = not inv.take_warm(func, self.now)
+        slices = cfg.vgpu * SLICES_PER_VGPU
+        alloc, tier = inv.device.start(func, slices, inv.model_mb(func),
+                                       self.now)
+        cold = tier == COLD
         if cold:
             self.cold_starts += 1
-        cold_ms = self.profiles[func].cold_ms if cold else 0.0
+            penalty_ms = self.profiles[func].cold_ms
+        elif tier == WARM:
+            # container exists but its weights were demoted to host RAM:
+            # pay the Torpor-style swap-in transfer, not a full cold start
+            penalty_ms = swap_in_ms(inv.model_mb(func))
+        else:
+            penalty_ms = 0.0
 
         noise = float(np.clip(
             1.0 + self.rng.normal(0.0, self.noise_sigma), 0.5, 2.0))
         exec_ms = self.profiles[func].exec_ms(cfg) * noise
         start = self.now + overhead_ms + transfer
-        end = start + cold_ms + exec_ms
+        end = start + penalty_ms + exec_ms
 
-        inv.alloc(cfg)
+        inv.free_vcpu -= cfg.vcpu
         rate = cfg.vcpu * VCPU_PRICE_PER_H + cfg.vgpu * VGPU_PRICE_PER_H
-        cost = rate * (cold_ms + exec_ms) / 3.6e6
+        cost = rate * (penalty_ms + exec_ms) / 3.6e6
         self.total_cost += cost
-        task = Task(jobs, stage, func, cfg, inv_idx, start, end, cold, cost)
+        task = Task(jobs, stage, func, cfg, inv_idx, start, end, cold, cost,
+                    tid=len(self.tasks), tier=tier, alloc_id=alloc.aid,
+                    quota_slices=slices, exec_start_ms=start + penalty_ms,
+                    dispatch_ms=self.now, q_since=self.now)
         self.tasks.append(task)
-        self.push_event(end, "complete", task)
+        self.running[task.tid] = task
+        self.push_event(end, "complete", (task, task.gen))
         # warm-pool policy hook: reactive scale-up / pre-warm scheduling /
         # scale-down all live in repro.serving.autoscaler
         self.autoscaler.on_dispatch(self, func, inv_idx, cold,
-                                    cold_ms + exec_ms)
+                                    penalty_ms + exec_ms)
+
+    # ---- vertical reallocation ---------------------------------------------
+    def resize_task(self, task: Task, new_slices: int) -> bool:
+        """Vertically resize a *running* task's compute quota without a
+        restart (HAS-GPU's lever).  The remaining execution is rescaled
+        by the profile quota model, the completion event is re-scheduled
+        (the old one goes stale via ``task.gen``), and the billed cost is
+        adjusted to the new fractional-vGPU rate for the remaining time.
+        Returns False if the task is not running, the target equals the
+        current quota, or the device lacks free slices to grow."""
+        if task.tid not in self.running or new_slices == task.quota_slices:
+            return False
+        inv = self.invokers[task.invoker]
+        old = task.quota_slices
+        if not inv.device.resize(task.alloc_id, new_slices):
+            return False
+        now = self.now
+        fp = self.profiles[task.func]
+        pivot = max(now, task.exec_start_ms)
+        remaining = max(task.end_ms - pivot, 0.0)
+        ratio = fp.exec_ms(task.config,
+                           quota_vgpu=new_slices / SLICES_PER_VGPU) / \
+            fp.exec_ms(task.config, quota_vgpu=old / SLICES_PER_VGPU)
+        new_remaining = remaining * ratio
+        # re-bill the remaining window at the new fractional-vGPU rate
+        old_rate = task.config.vcpu * VCPU_PRICE_PER_H + \
+            (old / SLICES_PER_VGPU) * VGPU_PRICE_PER_H
+        new_rate = task.config.vcpu * VCPU_PRICE_PER_H + \
+            (new_slices / SLICES_PER_VGPU) * VGPU_PRICE_PER_H
+        delta = (new_rate * new_remaining - old_rate * remaining) / 3.6e6
+        task.cost += delta
+        self.total_cost += delta
+        # close the slice-time segment at the old quota
+        self.slice_busy_ms += old * max(now - task.q_since, 0.0)
+        task.q_since = max(now, task.q_since)
+        task.end_ms = pivot + new_remaining
+        task.quota_slices = new_slices
+        task.gen += 1
+        self.push_event(task.end_ms, "complete", (task, task.gen))
+        self.resizes.append((now, task.invoker, task.tid, old, new_slices))
+        return True
 
     # ---- metrics -------------------------------------------------------------
     def slo_hit_rate(self) -> float:
@@ -452,4 +553,20 @@ class ClusterSim:
             "remote_transfers": self.remote_transfers,
             "config_misses": self.config_misses,
             "plan_uses": self.plan_uses,
+            **self.gpu_summary(),
+        }
+
+    def gpu_summary(self) -> dict[str, Any]:
+        """Device-model metrics aggregated over the invoker fleet."""
+        devs = [inv.device for inv in self.invokers]
+        return {
+            "hot_hits": sum(d.stats.hot_hits for d in devs),
+            "warm_hits": sum(d.stats.warm_hits for d in devs),
+            "swap_ins": sum(d.stats.swap_ins for d in devs),
+            "swap_in_ms": sum(d.stats.swap_in_ms for d in devs),
+            "demotions": sum(d.stats.demotions for d in devs),
+            "resizes_up": sum(d.stats.resizes_up for d in devs),
+            "resizes_down": sum(d.stats.resizes_down for d in devs),
+            "hbm_peak_mb": max((d.stats.hbm_peak_mb for d in devs),
+                               default=0.0),
         }

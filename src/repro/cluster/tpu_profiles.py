@@ -47,7 +47,8 @@ class TPUFunctionProfile(FunctionProfile):
             else _calibrated_overhead(cfg.name)
         t1 = self._exec_ms_raw(1, 1, 1)
         super().__init__(name=cfg.name, t1_ms=t1, cold_ms=spec.cold_ms,
-                         input_mb=spec.input_mb, cpu_frac=0.0)
+                         input_mb=spec.input_mb, cpu_frac=0.0,
+                         model_mb=2.0 * cfg.n_params / 1e6)  # bf16 weights
 
     # latency model --------------------------------------------------------
     def _decode_ms(self, batch: int, chips: int) -> float:
@@ -74,8 +75,13 @@ class TPUFunctionProfile(FunctionProfile):
         t_cpu = self._spec.cpu_ms_per_job * batch / (vcpu ** 0.7)
         return t + t_cpu
 
-    def exec_ms(self, c) -> float:                   # Config(batch,vcpu,vgpu)
-        return self._exec_ms_raw(c.batch, c.vcpu, c.vgpu)
+    def exec_ms(self, c, quota_vgpu=None) -> float:  # Config(batch,vcpu,vgpu)
+        # fractional quota throttles the TPU part only — host tokenize/
+        # detokenize work is unaffected by the accelerator share
+        t_tpu = self._prefill_ms(c.batch, c.vgpu) + \
+            self._spec.gen_len * self._decode_ms(c.batch, c.vgpu)
+        t_cpu = self._spec.cpu_ms_per_job * c.batch / (c.vcpu ** 0.7)
+        return t_tpu * self.quota_factor(c, quota_vgpu) + t_cpu
 
 
 def _calibrated_overhead(arch: str) -> float:

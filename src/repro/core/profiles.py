@@ -20,13 +20,22 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
-from typing import Iterable
+from typing import Iterable, Optional
 
 import numpy as np
+
+from repro.gpu.footprints import PAPER_MODEL_MB
 
 # Pricing (paper §4.1, following AWS EC2):
 VCPU_PRICE_PER_H = 0.034
 VGPU_PRICE_PER_H = 0.67
+
+# Fractional-quota slowdown exponent: a container whose compute quota is
+# throttled to ``q`` vGPUs (q may be fractional, resized while running)
+# sees its GPU part scale by (vgpu/q)^QUOTA_SLOWDOWN_EXP — slightly
+# sub-linear because kernel launch gaps absorb part of the throttling
+# (HAS-GPU reports near-linear throughput in the SM quota).
+QUOTA_SLOWDOWN_EXP = 0.9
 
 BATCHES = (1, 2, 4, 8, 16, 32, 64, 128)
 VCPUS = (1, 2, 4, 8)
@@ -48,21 +57,37 @@ class FunctionProfile:
     cold_ms: float               # cold-start time
     input_mb: float              # stage input size (data-transfer model)
     cpu_frac: float = 0.2        # fraction of t1 spent on the CPU part
+    model_mb: float = 0.0        # weight-checkpoint HBM footprint
 
-    def exec_ms(self, c: Config) -> float:
+    def quota_factor(self, c: Config, quota_vgpu: Optional[float]) -> float:
+        """GPU-part slowdown when the running container's compute quota
+        is ``quota_vgpu`` (fractional vGPUs) instead of the ``c.vgpu``
+        it was configured for.  >1 when throttled below the config,
+        <1 when granted surplus slices (vertical scale-up)."""
+        if quota_vgpu is None or quota_vgpu == c.vgpu:
+            return 1.0
+        return (c.vgpu / max(quota_vgpu, 1e-9)) ** QUOTA_SLOWDOWN_EXP
+
+    def exec_ms(self, c: Config,
+                quota_vgpu: Optional[float] = None) -> float:
         """Deterministic latency model (noise added by the emulator).
 
         Multi-accelerator tasks both data-parallelise the batch
         (ceil(b/g) per unit) and tensor-parallelise each inference
         (g^-0.2 — the TPU-substrate adaptation: a pjit sub-mesh speeds up a
         single inference, unlike MIG; see DESIGN §2).  Efficiency loss from
-        collectives is folded into the sub-linear exponents."""
+        collectives is folded into the sub-linear exponents.
+
+        ``quota_vgpu`` (fractional) overrides the *delivered* compute
+        share when a running pool has been vertically resized away from
+        its configured ``c.vgpu``."""
         t_serial = 0.05 * self.t1_ms                 # launch/framework floor
         t_cpu = self.cpu_frac * self.t1_ms
         t_gpu = (0.95 - self.cpu_frac) * self.t1_ms
         per_gpu_batch = int(np.ceil(c.batch / c.vgpu))
         cpu_part = t_cpu * (c.batch ** 0.2) / (c.vcpu ** 0.7)
         gpu_part = t_gpu * (per_gpu_batch ** 0.85) * (c.vgpu ** -0.12)
+        gpu_part *= self.quota_factor(c, quota_vgpu)
         return t_serial + cpu_part + gpu_part
 
     def cost(self, c: Config) -> float:
@@ -77,13 +102,19 @@ class FunctionProfile:
 # ---------------------------------------------------------------------------
 # The six paper functions (Table 3)
 # ---------------------------------------------------------------------------
+_PAPER_T3 = {
+    # name: (t1_ms, cold_ms, input_mb)
+    "super_resolution": (86.0, 3503.0, 2.7),
+    "segmentation": (293.0, 16510.0, 2.5),
+    "deblur": (319.0, 22343.0, 1.1),
+    "classification": (147.0, 18299.0, 0.147),
+    "background_removal": (1047.0, 3729.0, 2.5),
+    "depth": (828.0, 16479.0, 0.648),
+}
 PAPER_FUNCTIONS = {
-    "super_resolution": FunctionProfile("super_resolution", 86.0, 3503.0, 2.7),
-    "segmentation": FunctionProfile("segmentation", 293.0, 16510.0, 2.5),
-    "deblur": FunctionProfile("deblur", 319.0, 22343.0, 1.1),
-    "classification": FunctionProfile("classification", 147.0, 18299.0, 0.147),
-    "background_removal": FunctionProfile("background_removal", 1047.0, 3729.0, 2.5),
-    "depth": FunctionProfile("depth", 828.0, 16479.0, 0.648),
+    name: FunctionProfile(name, t1, cold, mb,
+                          model_mb=PAPER_MODEL_MB[name])
+    for name, (t1, cold, mb) in _PAPER_T3.items()
 }
 
 

@@ -1,0 +1,18 @@
+"""Shareable-GPU device model (fractional vGPU slices, HBM accounting,
+model-state swap tiers).
+
+  * ``device``     — :class:`DeviceModel`: per-invoker slice lattice,
+                     resizable running allocations, two-tier warm pools;
+  * ``footprints`` — model-weight footprints + the Torpor-style
+                     host->HBM swap-in timing model.
+"""
+from repro.gpu.device import (COLD, HOT, MIN_SLICES, SLICES_PER_VGPU, WARM,
+                              Allocation, DeviceModel, DeviceStats,
+                              OversubscribedError, WarmContainer)
+from repro.gpu.footprints import PAPER_MODEL_MB, swap_in_ms
+
+__all__ = [
+    "Allocation", "COLD", "DeviceModel", "DeviceStats", "HOT",
+    "MIN_SLICES", "OversubscribedError", "PAPER_MODEL_MB",
+    "SLICES_PER_VGPU", "WARM", "WarmContainer", "swap_in_ms",
+]

@@ -1,0 +1,325 @@
+"""First-class shareable-GPU device model.
+
+Turns one invoker's accelerator into a sliceable device with three
+coupled resources, replacing the scalar ``vgpus`` counter the emulator
+used to carry:
+
+  * a **fractional compute lattice** — capacity is ``vgpus *
+    SLICES_PER_VGPU`` slices; every running container holds an
+    :class:`Allocation` whose slice quota can be *resized without a
+    restart* (HAS-GPU's vertical-scaling lever, arXiv 2505.01968);
+  * **HBM accounting** — running containers pin their model weights in
+    device memory; idle warm containers keep weights resident ("hot")
+    until capacity pressure demotes them to host RAM ("warm" tier,
+    Torpor/FaaSwap, arXiv 2306.03622) — see ``footprints.swap_in_ms``
+    for the restart penalty each tier pays;
+  * **two-tier warm pools** — the keep-alive pool entries the emulator's
+    ``take_warm``/``add_warm`` used to store as bare expiry floats are
+    now :class:`WarmContainer` objects carrying their tier and resident
+    bytes.
+
+``hbm_per_vgpu_mb=None`` (the default) models an *unbounded* HBM: usage
+and peaks are still tracked, but nothing is ever demoted and every warm
+container stays hot — this is exactly the pre-device-model emulator
+behaviour, so legacy runs reproduce bit-for-bit.  Pass a finite value to
+turn memory into a real constraint.
+
+Every mutation re-verifies the oversubscription invariants (slices,
+HBM, per-allocation floors) and raises :class:`OversubscribedError` on
+violation — the property tests drive random alloc/resize/release/swap
+sequences straight through the public API.
+"""
+from __future__ import annotations
+
+import bisect
+import dataclasses
+import itertools
+import math
+from collections import defaultdict
+from typing import Optional
+
+from repro.gpu.footprints import swap_in_ms
+
+# Quota lattice resolution: 1/4 vGPU.  The scheduler's integer-vGPU
+# configuration lattice maps onto it as ``cfg.vgpu * SLICES_PER_VGPU``;
+# vertical resizes move in single-slice steps.
+SLICES_PER_VGPU = 4
+MIN_SLICES = 1
+
+HOT = "hot"      # weights resident in HBM
+WARM = "warm"    # weights in host RAM (swap-in penalty on start)
+COLD = "cold"    # no container anywhere (full cold start)
+
+
+class OversubscribedError(RuntimeError):
+    """A device invariant (slice or HBM capacity) was violated."""
+
+
+@dataclasses.dataclass
+class Allocation:
+    """One running container's share of the device."""
+    aid: int
+    func: str
+    slices: int              # current compute quota
+    initial_slices: int      # quota granted at dispatch (resize anchor)
+    hbm_mb: float            # weights pinned while running
+
+
+@dataclasses.dataclass
+class WarmContainer:
+    """One keep-alive pool entry."""
+    func: str
+    expiry: float
+    hbm_mb: float            # resident bytes (0 once demoted)
+    tier: str                # HOT | WARM
+
+
+@dataclasses.dataclass
+class DeviceStats:
+    hot_hits: int = 0
+    warm_hits: int = 0       # container found but weights were in host RAM
+    cold_misses: int = 0
+    swap_ins: int = 0
+    swap_in_ms: float = 0.0
+    demotions: int = 0       # hot -> warm evictions under HBM pressure
+    resizes_up: int = 0
+    resizes_down: int = 0
+    hbm_peak_mb: float = 0.0
+
+
+class DeviceModel:
+    def __init__(self, vgpus: int,
+                 hbm_per_vgpu_mb: Optional[float] = None,
+                 slices_per_vgpu: int = SLICES_PER_VGPU):
+        self.vgpus = vgpus
+        self.slices_per_vgpu = slices_per_vgpu
+        self.total_slices = vgpus * slices_per_vgpu
+        self.used_slices = 0
+        self.hbm_total_mb = (math.inf if hbm_per_vgpu_mb is None
+                             else vgpus * hbm_per_vgpu_mb)
+        self.hbm_used_mb = 0.0
+        self._gc_now = -math.inf
+        self.pools: dict[str, list[WarmContainer]] = defaultdict(list)
+        self.allocs: dict[int, Allocation] = {}
+        self._aid = itertools.count()
+        self.stats = DeviceStats()
+
+    # ---- capacity views ---------------------------------------------------
+    @property
+    def free_slices(self) -> int:
+        return self.total_slices - self.used_slices
+
+    @property
+    def free_hbm_mb(self) -> float:
+        return self.hbm_total_mb - self.hbm_used_mb
+
+    def _capped(self, model_mb: float) -> float:
+        """Oversize checkpoints (> device HBM) run in streaming mode and
+        pin the whole device rather than making placement infeasible."""
+        return min(model_mb, self.hbm_total_mb)
+
+    # ---- warm-pool upkeep -------------------------------------------------
+    def _gc(self, now: float) -> None:
+        """Drop expired keep-alive containers, releasing resident HBM.
+
+        Simulated time is monotone and new pool entries always expire in
+        the future, so repeated sweeps at the same instant (placement
+        probes every invoker x candidate) are skipped."""
+        if now <= self._gc_now:
+            return
+        self._gc_now = now
+        for func, pool in self.pools.items():
+            live = []
+            for c in pool:
+                if c.expiry < now:
+                    self.hbm_used_mb -= c.hbm_mb
+                else:
+                    live.append(c)
+            if len(live) != len(pool):
+                self.pools[func][:] = live
+
+    def _demotable_mb(self, exclude_func: Optional[str] = None) -> float:
+        return sum(c.hbm_mb for func, pool in self.pools.items()
+                   for c in pool
+                   if c.tier == HOT and func != exclude_func)
+
+    def _ensure_hbm(self, need_mb: float) -> None:
+        """Demote idle hot containers (earliest-expiry ~ LRU first) until
+        ``need_mb`` fits.  Caller must have verified feasibility."""
+        while self.free_hbm_mb < need_mb:
+            victims = [c for pool in self.pools.values() for c in pool
+                       if c.tier == HOT and c.hbm_mb > 0]
+            if not victims:
+                raise OversubscribedError(
+                    f"need {need_mb:.0f} MB HBM, "
+                    f"free {self.free_hbm_mb:.0f} MB, nothing demotable")
+            victim = min(victims, key=lambda c: c.expiry)
+            self.hbm_used_mb -= victim.hbm_mb
+            victim.hbm_mb = 0.0
+            victim.tier = WARM
+            self.stats.demotions += 1
+
+    def _hot(self, func: str):
+        return [c for c in self.pools[func] if c.tier == HOT]
+
+    # ---- admission --------------------------------------------------------
+    def fits(self, slices: int, model_mb: float = 0.0,
+             func: Optional[str] = None, now: float = 0.0) -> bool:
+        """Can a container of ``slices`` quota for ``func`` start now?
+
+        HBM feasibility counts weights already resident in a hot warm
+        container for ``func`` (they would be reused, costing nothing)
+        and idle hot containers of *other* functions (they can be
+        demoted to host to make room)."""
+        self._gc(now)
+        if slices > self.free_slices:
+            return False
+        if func is not None and self._hot(func):
+            return True                      # hot reuse: no new HBM needed
+        need = self._capped(model_mb)
+        return need <= self.free_hbm_mb + self._demotable_mb(func)
+
+    def hbm_admits(self, model_mb: float, func: Optional[str] = None,
+                   now: float = 0.0) -> bool:
+        """HBM-only feasibility (compute slices ignored) — lets the
+        vertical autoscaler avoid shrinking quotas for a placement that
+        memory would reject anyway."""
+        self._gc(now)
+        if func is not None and self._hot(func):
+            return True
+        return self._capped(model_mb) <= \
+            self.free_hbm_mb + self._demotable_mb(func)
+
+    # ---- container lifecycle ---------------------------------------------
+    def start(self, func: str, slices: int, model_mb: float,
+              now: float) -> tuple[Allocation, str]:
+        """Start a container: pop the best warm-pool entry (hot before
+        warm, earliest expiry first) and pin weights + quota.  Returns
+        ``(allocation, tier)`` where tier tells the caller which restart
+        penalty to charge (hot: 0, warm: ``swap_in_ms``, cold: full
+        cold start)."""
+        self._gc(now)
+        if slices > self.free_slices:
+            raise OversubscribedError(
+                f"alloc {slices} slices > free {self.free_slices}")
+        pool = self.pools[func]
+        hit: Optional[WarmContainer] = None
+        for want_tier in (HOT, WARM):
+            tiered = [c for c in pool if c.tier == want_tier]
+            if tiered:
+                hit = min(tiered, key=lambda c: c.expiry)
+                break
+        if hit is not None:
+            pool.remove(hit)
+        if hit is not None and hit.tier == HOT:
+            tier, hbm = HOT, hit.hbm_mb      # weights stay where they are
+            self.stats.hot_hits += 1
+        else:
+            need = self._capped(model_mb)
+            self._ensure_hbm(need)
+            self.hbm_used_mb += need
+            hbm = need
+            if hit is not None:
+                tier = WARM
+                self.stats.warm_hits += 1
+                self.stats.swap_ins += 1
+                self.stats.swap_in_ms += swap_in_ms(model_mb)
+            else:
+                tier = COLD
+                self.stats.cold_misses += 1
+        self.used_slices += slices
+        alloc = Allocation(next(self._aid), func, slices, slices, hbm)
+        self.allocs[alloc.aid] = alloc
+        self.stats.hbm_peak_mb = max(self.stats.hbm_peak_mb,
+                                     self.hbm_used_mb)
+        self.check()
+        return alloc, tier
+
+    def resize(self, aid: int, new_slices: int) -> bool:
+        """Vertically resize a *running* allocation's compute quota
+        without a restart.  Returns False (no-op) if the target is
+        below the floor or the device lacks free slices to grow."""
+        a = self.allocs.get(aid)
+        if a is None or new_slices < MIN_SLICES:
+            return False
+        delta = new_slices - a.slices
+        if delta == 0:
+            return False
+        if delta > 0 and delta > self.free_slices:
+            return False
+        self.used_slices += delta
+        a.slices = new_slices
+        if delta > 0:
+            self.stats.resizes_up += 1
+        else:
+            self.stats.resizes_down += 1
+        self.check()
+        return True
+
+    def stop(self, aid: int, expiry: float) -> WarmContainer:
+        """Finish a container: free its quota and park it in the
+        keep-alive pool *hot* — weights remain resident until expiry or
+        demotion."""
+        a = self.allocs.pop(aid)
+        self.used_slices -= a.slices
+        c = WarmContainer(a.func, expiry, a.hbm_mb, HOT)
+        pool = self.pools[a.func]
+        bisect.insort(pool, c, key=lambda x: x.expiry)
+        self.check()
+        return c
+
+    # ---- warm-pool API (autoscalers / emulator) ---------------------------
+    def add_warm(self, func: str, expiry: float, model_mb: float,
+                 now: float = 0.0) -> WarmContainer:
+        """Pre-warm a container.  It comes up hot if HBM is free; under
+        pressure it is provisioned warm (weights staged in host RAM) —
+        pre-warming never demotes somebody else's resident weights."""
+        self._gc(now)
+        need = self._capped(model_mb)
+        if need <= self.free_hbm_mb:
+            self.hbm_used_mb += need
+            c = WarmContainer(func, expiry, need, HOT)
+            self.stats.hbm_peak_mb = max(self.stats.hbm_peak_mb,
+                                         self.hbm_used_mb)
+        else:
+            c = WarmContainer(func, expiry, 0.0, WARM)
+        bisect.insort(self.pools[func], c, key=lambda x: x.expiry)
+        self.check()
+        return c
+
+    def has_warm(self, func: str, now: float) -> bool:
+        return any(c.expiry >= now for c in self.pools[func])
+
+    def warm_entries(self, func: str, now: float) -> list[WarmContainer]:
+        return [c for c in self.pools[func] if c.expiry >= now]
+
+    def retire(self, func: str, container: WarmContainer) -> None:
+        """Scale-down: drop one keep-alive container, freeing HBM."""
+        self.pools[func].remove(container)
+        self.hbm_used_mb -= container.hbm_mb
+        self.check()
+
+    # ---- invariants -------------------------------------------------------
+    def check(self) -> None:
+        """Raise OversubscribedError if any invariant is violated."""
+        used = sum(a.slices for a in self.allocs.values())
+        if used != self.used_slices:
+            raise OversubscribedError(
+                f"slice ledger drift: {used} != {self.used_slices}")
+        if not 0 <= self.used_slices <= self.total_slices:
+            raise OversubscribedError(
+                f"slices oversubscribed: {self.used_slices}"
+                f"/{self.total_slices}")
+        if any(a.slices < MIN_SLICES for a in self.allocs.values()):
+            raise OversubscribedError("allocation below MIN_SLICES")
+        resident = sum(a.hbm_mb for a in self.allocs.values()) + \
+            sum(c.hbm_mb for pool in self.pools.values() for c in pool)
+        if not math.isclose(resident, self.hbm_used_mb,
+                            rel_tol=1e-9, abs_tol=1e-6):
+            raise OversubscribedError(
+                f"HBM ledger drift: {resident} != {self.hbm_used_mb}")
+        if math.isfinite(self.hbm_total_mb) and \
+                self.hbm_used_mb > self.hbm_total_mb + 1e-6:
+            raise OversubscribedError(
+                f"HBM oversubscribed: {self.hbm_used_mb:.0f}"
+                f"/{self.hbm_total_mb:.0f} MB")

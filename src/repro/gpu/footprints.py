@@ -1,0 +1,51 @@
+"""Model-state footprints + host<->HBM swap timing (Torpor/FaaSwap model).
+
+Torpor (arXiv 2306.03622) observes that for GPU serverless the dominant
+"cold start" component is loading model weights into device memory, and
+that keeping weights in *host* RAM and swapping them in over PCIe on
+demand is an order of magnitude cheaper than a full container cold start.
+This module provides that middle tier's cost model:
+
+  * ``swap_in_ms(model_mb)`` — host -> HBM transfer time for a model
+    checkpoint of ``model_mb`` megabytes at PCIe-class bandwidth plus a
+    fixed allocator/stream-setup charge;
+  * per-function weight footprints for the paper's six image functions
+    (plausible fp16 checkpoint sizes; the zoo derives its own from the
+    parameter counts, see ``cluster/tpu_profiles.py``).
+
+The three warm tiers the device model distinguishes:
+
+  hot   weights resident in HBM          -> restart penalty 0
+  warm  weights in host RAM              -> restart penalty swap_in_ms
+  cold  nothing anywhere                 -> restart penalty profile.cold_ms
+"""
+from __future__ import annotations
+
+# Host -> device effective bandwidth.  PCIe 4.0 x16 peaks at 32 GB/s; real
+# pinned-memory H2D copies sustain roughly half (Torpor reports ~1.5 s for
+# multi-GB LLMs, consistent with this figure).  1 GB/s == 1 MB/ms.
+H2D_GBPS = 16.0
+# Fixed per-swap charge: device allocator + stream setup + cudnn/XLA
+# re-binding of the resident executable to the new weight buffers.
+SWAP_FIXED_MS = 5.0
+
+
+def swap_in_ms(model_mb: float) -> float:
+    """Host->HBM restart penalty for a ``model_mb``-MB checkpoint."""
+    if model_mb <= 0.0:
+        return 0.0
+    return SWAP_FIXED_MS + model_mb / H2D_GBPS
+
+
+# fp16 checkpoint sizes (MB) for the paper's Table-3 image functions —
+# typical published checkpoints for each task class (EDSR-class SR,
+# DeepLab-class segmentation, DeblurGAN-class deblurring, ResNet-152-class
+# classification, U^2-Net-class matting, MiDaS-large-class depth).
+PAPER_MODEL_MB = {
+    "super_resolution": 170.0,
+    "segmentation": 460.0,
+    "deblur": 380.0,
+    "classification": 230.0,
+    "background_removal": 680.0,
+    "depth": 530.0,
+}

@@ -67,7 +67,7 @@ def emulate(setting: str = "moderate-normal", n: int = 200, seed: int = 0,
     ``setting`` through ``cluster.workload.generate``.  Scenario mode runs
     the online-serving stack: ``serving.traces`` arrival engine behind the
     ``serving.gateway`` admission front end, with the warm-pool policy
-    named by ``autoscaler`` (ewma | finegrained | none).
+    named by ``autoscaler`` (ewma | finegrained | vertical | none).
     """
     from repro.serving import Gateway, get_autoscaler, get_scenario
 
@@ -195,8 +195,9 @@ def main():
                     help="serving scenario; omit for the legacy uniform "
                          "setting")
     ap.add_argument("--autoscaler", default=None,
-                    choices=["ewma", "finegrained", "none"],
-                    help="warm-pool policy (default: ewma)")
+                    choices=["ewma", "finegrained", "vertical", "none"],
+                    help="warm-pool policy (default: ewma); 'vertical' "
+                         "adds fractional vGPU resizing of running pools")
     ap.add_argument("--slo-mult", type=float, default=1.0)
     args = ap.parse_args()
     if args.real:

@@ -12,14 +12,15 @@ Modules:
 """
 from repro.serving.autoscaler import (AUTOSCALERS, AutoscalerPolicy,
                                       EwmaPrewarm, FineGrained, NoPrewarm,
-                                      get_autoscaler)
+                                      VerticalFineGrained, get_autoscaler)
 from repro.serving.gateway import Gateway
 from repro.serving.telemetry import LatencyHistogram, Telemetry, format_table
-from repro.serving.traces import (SCENARIOS, Arrival, Scenario, get_scenario)
+from repro.serving.traces import (SCENARIOS, Arrival, Scenario,
+                                  TraceReplayScenario, get_scenario)
 
 __all__ = [
     "AUTOSCALERS", "AutoscalerPolicy", "EwmaPrewarm", "FineGrained",
-    "NoPrewarm", "get_autoscaler", "Gateway", "LatencyHistogram",
-    "Telemetry", "format_table", "SCENARIOS", "Arrival", "Scenario",
-    "get_scenario",
+    "NoPrewarm", "VerticalFineGrained", "get_autoscaler", "Gateway",
+    "LatencyHistogram", "Telemetry", "format_table", "SCENARIOS", "Arrival",
+    "Scenario", "TraceReplayScenario", "get_scenario",
 ]

@@ -12,15 +12,25 @@ swap policies without touching the event loop:
     arrival-rate and service-time estimates drive a Little's-law target
     pool size; surplus containers are retired early (scale-down), deficits
     are pre-warmed immediately.
+  * ``VerticalFineGrained`` — ``FineGrained`` plus HAS-GPU's *vertical*
+    lever: fractional vGPU quotas of *running* pools are resized in
+    place — grown into idle slices when no work is queued, shrunk (down
+    to a floor) to admit queued work that would otherwise block.
   * ``NoPrewarm``    — cold-start-always baseline (no pools, no events).
 
-Policies interact with the emulator through three hooks:
+Policies interact with the emulator through five hooks:
   ``seed_pools(sim)``                       once, after invokers exist;
   ``on_dispatch(sim, func, inv, cold, ms)`` after every task dispatch;
+  ``on_complete(sim, task)``                after a task finishes (its
+                                            successors already queued);
+  ``on_congestion(sim, app, stage, cfgs)``  when no candidate config
+                                            placed — return True after
+                                            freeing capacity to retry;
   ``on_tick(sim, payload)``                 on ``autoscale`` timer events
                                             the policy scheduled itself.
 Pre-warms are requested by pushing the emulator's generic ``prewarm``
-event; scale-down manipulates invoker pools directly.
+event; scale-down manipulates invoker device pools directly; vertical
+resizes go through ``sim.resize_task``.
 """
 from __future__ import annotations
 
@@ -28,6 +38,7 @@ import math
 from typing import Optional
 
 from repro.core.profiles import Config
+from repro.gpu import SLICES_PER_VGPU
 
 AUTOSCALERS: dict[str, type] = {}
 
@@ -52,11 +63,19 @@ class AutoscalerPolicy:
     def on_tick(self, sim, payload) -> None:
         """Handle an ``autoscale`` event the policy scheduled earlier."""
 
+    def on_complete(self, sim, task) -> None:
+        """Observe a task completion (capacity was just released)."""
+
+    def on_congestion(self, sim, app, stage, candidates) -> bool:
+        """No candidate config could be placed.  Return True after
+        freeing capacity (e.g. shrinking running quotas) so the emulator
+        retries placement once; False to let the queue block."""
+        return False
+
     # ---- shared helpers ---------------------------------------------------
     @staticmethod
     def warm_count(sim, func: str) -> int:
-        now = sim.now
-        return sum(sum(1 for e in inv.warm[func] if e >= now)
+        return sum(len(inv.device.warm_entries(func, sim.now))
                    for inv in sim.invokers)
 
 
@@ -99,7 +118,8 @@ class EwmaPrewarm(AutoscalerPolicy):
         if cold:
             # reactive scale-up: a cold start signals under-provisioned
             # capacity — warm an extra container alongside this one
-            sim.invokers[inv_idx].add_warm(func, sim.now + KEEPALIVE_MS)
+            sim.invokers[inv_idx].add_warm(func, sim.now + KEEPALIVE_MS,
+                                           sim.now)
         prev = self.ewma.get(func)
         if prev is None:
             self.ewma[func] = (self.bootstrap_interval_ms, sim.now)
@@ -182,7 +202,8 @@ class FineGrained(AutoscalerPolicy):
         target = self._target(sim, func)
         if target is None:
             if cold:  # bootstrap: behave reactively until the window fills
-                sim.invokers[inv_idx].add_warm(func, sim.now + KEEPALIVE_MS)
+                sim.invokers[inv_idx].add_warm(func, sim.now + KEEPALIVE_MS,
+                                               sim.now)
             return
         # count prewarms already in flight (pushed but not yet popped by
         # the event loop) or same-instant dispatches would re-push the
@@ -199,17 +220,121 @@ class FineGrained(AutoscalerPolicy):
             # scale down: retire the latest-expiring surplus containers
             surplus = have - target
             pools = sorted(
-                ((e, inv) for inv in sim.invokers
-                 for e in inv.warm[func] if e >= sim.now),
-                key=lambda p: -p[0])
-            for e, inv in pools[:surplus]:
-                inv.warm[func].remove(e)
+                ((c, inv) for inv in sim.invokers
+                 for c in inv.device.warm_entries(func, sim.now)),
+                key=lambda p: -p[0].expiry)
+            for c, inv in pools[:surplus]:
+                inv.device.retire(func, c)
 
     def on_tick(self, sim, payload):
         from repro.cluster.emulator import KEEPALIVE_MS
         func, inv_idx = payload
-        sim.invokers[inv_idx].add_warm(func, sim.now + KEEPALIVE_MS)
+        sim.invokers[inv_idx].add_warm(func, sim.now + KEEPALIVE_MS, sim.now)
         self._pending[func] = max(self._pending.get(func, 0) - 1, 0)
+
+
+@_register
+class VerticalFineGrained(FineGrained):
+    """``FineGrained`` + vertical fractional-vGPU reallocation of
+    *running* pools (HAS-GPU arXiv 2505.01968's actual lever).
+
+    Two moves, both through ``sim.resize_task`` so latency, cost and the
+    device slice ledger stay consistent:
+
+      * **grow** — when a task completes (or a dispatch leaves slack)
+        and *no work is queued*, idle slices are granted to the running
+        tasks on that invoker, up to ``grow_cap`` x the dispatched
+        quota; tasks finish early instead of the slices idling.
+      * **shrink** — when a queued stage cannot be placed anywhere, the
+        policy throttles running tasks (never below ``shrink_floor`` x
+        the dispatched quota, and never below one slice) on the best
+        candidate invoker until the blocked config fits, then the
+        emulator retries placement.  Container-granularity scaling can
+        only wait for a whole container to finish; this is the lever it
+        lacks.
+    """
+    name = "vertical"
+
+    def __init__(self, grow_cap: float = 2.0, shrink_floor: float = 0.5,
+                 **kw):
+        super().__init__(**kw)
+        self.grow_cap = grow_cap
+        self.shrink_floor = shrink_floor
+
+    # ---- helpers ----------------------------------------------------------
+    @staticmethod
+    def _queued(sim) -> bool:
+        return any(len(q) for q in sim.queues.values())
+
+    def _floor(self, task) -> int:
+        return max(1, math.ceil(task.config.vgpu * SLICES_PER_VGPU *
+                                self.shrink_floor))
+
+    def _cap(self, task) -> int:
+        return max(1, int(task.config.vgpu * SLICES_PER_VGPU *
+                          self.grow_cap))
+
+    @staticmethod
+    def _running_on(sim, inv_idx: int):
+        return sorted((t for t in sim.running.values()
+                       if t.invoker == inv_idx),
+                      key=lambda t: (-t.end_ms, t.tid))
+
+    # ---- grow -------------------------------------------------------------
+    def _grow(self, sim, inv_idx: int):
+        if self._queued(sim):
+            return                      # queued work gets the slices instead
+        inv = sim.invokers[inv_idx]
+        free = inv.device.free_slices
+        for task in self._running_on(sim, inv_idx):   # latest finisher first
+            if free <= 0:
+                break
+            grant = min(free, self._cap(task) - task.quota_slices)
+            if grant > 0 and sim.resize_task(task,
+                                             task.quota_slices + grant):
+                free -= grant
+
+    def on_complete(self, sim, task):
+        self._grow(sim, task.invoker)
+
+    def on_dispatch(self, sim, func, inv_idx, cold, service_ms):
+        super().on_dispatch(sim, func, inv_idx, cold, service_ms)
+        self._grow(sim, inv_idx)
+
+    # ---- shrink -----------------------------------------------------------
+    def on_congestion(self, sim, app, stage, candidates) -> bool:
+        func = app.func_of[stage]
+        for cfg in candidates:
+            if not sim.gpu_sharing:
+                # mirror the emulator's ablation transform: the retried
+                # placement will ask for the whole device, so freeing
+                # less than that is pointless throttling
+                cfg = Config(cfg.batch, cfg.vcpu, sim.invokers[0].vgpus)
+            need = cfg.vgpu * SLICES_PER_VGPU
+            for inv in sim.invokers:
+                if inv.free_vcpu < cfg.vcpu:
+                    continue
+                if not inv.device.hbm_admits(inv.model_mb(func), func,
+                                             sim.now):
+                    continue            # memory, not compute, is the blocker
+                deficit = need - inv.device.free_slices
+                running = self._running_on(sim, inv.idx)
+                headroom = sum(max(t.quota_slices - self._floor(t), 0)
+                               for t in running)
+                if deficit <= 0 or headroom < deficit:
+                    continue
+                # throttle the biggest donors first until the config fits
+                for t in sorted(running,
+                                key=lambda t: (self._floor(t) -
+                                               t.quota_slices, t.tid)):
+                    give = min(max(t.quota_slices - self._floor(t), 0),
+                               deficit)
+                    if give > 0 and sim.resize_task(
+                            t, t.quota_slices - give):
+                        deficit -= give
+                    if deficit <= 0:
+                        return True
+        return False
 
 
 def get_autoscaler(name: str, **kw) -> AutoscalerPolicy:

@@ -5,9 +5,18 @@ edge fronts invokers: a scenario's request trace is injected open-loop
 (arrivals do not wait for completions), and each request passes an
 admission check *at its arrival time in simulated time*.  Requests that
 are already doomed — their remaining SLO budget cannot cover even the
-fastest possible execution plus the current backlog — are shed at the
+fastest possible execution plus the predicted queueing — are shed at the
 door instead of wasting GPU time on a guaranteed miss (the
 Torpor/FaaSwap observation that queueing doomed work poisons the pool).
+
+The queueing predictor is a **per-stage queueing-delay EWMA**: realized
+queue waits (task start minus job ready, observed as tasks dispatch) are
+folded into one EWMA per (app, stage), and an arrival's predicted delay
+is the critical-path sum of its stages' EWMAs.  This replaces the old
+fleet-averaged backlog estimate, which smeared one hot stage's queue
+over every invoker.  Every shed decision is logged with its budget and
+prediction so telemetry can score *shed precision* after the run (true
+sheds — requests that would indeed have missed — vs false sheds).
 
 Admitted requests flow into the emulator's per-(app, stage) AFW queues
 unchanged; the scheduler under test never sees shed traffic.
@@ -25,15 +34,22 @@ class Gateway:
     """Admission-control front end over a ``ClusterSim``.
 
     ``shed_doomed=False`` turns the gateway into a pure injector (every
-    arrival admitted) — the ablation baseline.
+    arrival admitted) — the ablation baseline.  ``backlog_aware=False``
+    drops the queueing-delay term from the admission check (the doomed
+    test then uses the empty-cluster fastest path only).
     """
 
     def __init__(self, sim, telemetry: Optional[Telemetry] = None,
-                 shed_doomed: bool = True, backlog_aware: bool = True):
+                 shed_doomed: bool = True, backlog_aware: bool = True,
+                 qdelay_alpha: float = 0.3):
         self.sim = sim
         self.telemetry = telemetry if telemetry is not None else Telemetry()
         self.shed_doomed = shed_doomed
         self.backlog_aware = backlog_aware
+        self.qdelay_alpha = qdelay_alpha
+        # per-(app, stage) EWMA of realized queueing delay
+        self._qdelay: dict[tuple[str, str], float] = {}
+        self._tasks_seen = 0
         # fastest possible end-to-end time per app: critical path with every
         # stage at its profile-lattice minimum latency
         self._fastest_ms = {
@@ -41,29 +57,45 @@ class Gateway:
                 app, lambda s, a=app: float(sim.tables[a.func_of[s]].min_time))
             for name, app in sim.apps.items()
         }
+        self.telemetry.fastest_ms = dict(self._fastest_ms)
         sim.admission = self._admit
 
-    # ---- admission ---------------------------------------------------------
-    def _backlog_ms(self, app) -> float:
-        """Crude backlog estimate: queued jobs of this app, costed at each
-        stage's fastest time, spread over the invoker fleet."""
+    # ---- queueing-delay model ----------------------------------------------
+    def _ingest_dispatches(self) -> None:
+        """Fold queue waits of tasks dispatched since the last admission
+        decision into the per-stage EWMAs (``sim.tasks`` is appended in
+        nondecreasing simulated time, so this is an online pass)."""
+        tasks = self.sim.tasks
+        a = self.qdelay_alpha
+        while self._tasks_seen < len(tasks):
+            t = tasks[self._tasks_seen]
+            self._tasks_seen += 1
+            key = (t.jobs[0].inst.app.name, t.stage)
+            for j in t.jobs:
+                wait = max(t.start_ms - j.ready_ms, 0.0)
+                prev = self._qdelay.get(key)
+                self._qdelay[key] = wait if prev is None \
+                    else (1.0 - a) * prev + a * wait
+
+    def predicted_queueing_ms(self, app) -> float:
+        """Critical-path sum of the per-stage queueing-delay EWMAs."""
         if not self.backlog_aware:
             return 0.0
-        total = 0.0
-        for stage in app.stages:
-            q = self.sim.queues.get((app.name, stage))
-            if q:
-                total += len(q) * float(
-                    self.sim.tables[app.func_of[stage]].min_time)
-        return total / max(len(self.sim.invokers), 1)
+        self._ingest_dispatches()
+        return critical_path(
+            app, lambda s: self._qdelay.get((app.name, s), 0.0))
 
+    # ---- admission ---------------------------------------------------------
     def _admit(self, sim, inst) -> bool:
         self.telemetry.on_injected(inst.app.name)
         if self.shed_doomed:
             budget = inst.deadline_ms - sim.now
-            need = self._fastest_ms[inst.app.name] + self._backlog_ms(inst.app)
+            fastest = self._fastest_ms[inst.app.name]
+            need = fastest + self.predicted_queueing_ms(inst.app)
             if need > budget:
-                self.telemetry.on_shed(inst.app.name)
+                self.telemetry.on_shed(inst.app.name, t_ms=sim.now,
+                                       budget_ms=budget, need_ms=need,
+                                       fastest_ms=fastest)
                 return False
         self.telemetry.on_admitted(inst.app.name)
         return True

@@ -1,11 +1,20 @@
 """Serving telemetry: per-stage latency histograms, SLO attainment, cost,
-utilization, cold-start and shed counters.
+utilization, GPU device-model metrics (slices, HBM, swap tiers), shed
+precision, cold-start and shed counters.
 
 ``Telemetry`` is fed from two sides:
-  * the gateway increments injection/admission/shed counters online;
+  * the gateway increments injection/admission/shed counters online (shed
+    decisions are logged with budget + prediction for precision scoring);
   * after (or during) a run, ``collect(sim)`` derives per-stage queue/exec
-    histograms, per-app SLO attainment, utilization and cost from the
-    emulator's task log.
+    histograms, per-app SLO attainment, utilization, cost, the aggregated
+    device-model counters (hot/warm hits, swap-ins, demotions, vertical
+    resizes, HBM peak) and shed precision from the emulator's logs.
+
+Shed precision: each shed is scored retrospectively — *true* if the
+request was provably doomed (budget below the empty-cluster fastest
+path) or the completed same-app request arriving nearest in time missed
+that budget too; *false* if that neighbour made it; *unknown* when no
+completed neighbour exists to compare against.
 
 ``summary()`` returns the structured dict the benchmarks consume;
 ``format_table(rows)`` renders a list of such dicts as the human-readable
@@ -13,11 +22,14 @@ sweep table.
 """
 from __future__ import annotations
 
+import bisect
 import dataclasses
 from collections import defaultdict
 from typing import Any, Optional
 
 import numpy as np
+
+from repro.gpu import SLICES_PER_VGPU
 
 
 class LatencyHistogram:
@@ -69,6 +81,16 @@ class LatencyHistogram:
 
 
 @dataclasses.dataclass
+class ShedRecord:
+    """One load-shedding decision, kept for precision scoring."""
+    t_ms: float
+    app: str
+    budget_ms: float
+    need_ms: float               # fastest + predicted queueing at decision
+    fastest_ms: float            # empty-cluster critical path
+
+
+@dataclasses.dataclass
 class StageStats:
     queue: LatencyHistogram = dataclasses.field(default_factory=LatencyHistogram)
     exec: LatencyHistogram = dataclasses.field(default_factory=LatencyHistogram)
@@ -96,6 +118,12 @@ class Telemetry:
         self.scheduler = ""
         self.autoscaler = ""
         self.scenario = ""
+        self.gpu: dict[str, Any] = {}
+        self.fastest_ms: dict[str, float] = {}   # set by the gateway
+        self.shed_records: list[ShedRecord] = []
+        self.shed_true = 0
+        self.shed_false = 0
+        self.shed_unknown = 0
 
     # ---- gateway-side ------------------------------------------------------
     def on_injected(self, app: str):
@@ -104,8 +132,15 @@ class Telemetry:
     def on_admitted(self, app: str):
         self.admitted[app] += 1
 
-    def on_shed(self, app: str):
+    def on_shed(self, app: str, t_ms: Optional[float] = None,
+                budget_ms: Optional[float] = None,
+                need_ms: Optional[float] = None,
+                fastest_ms: Optional[float] = None):
         self.shed[app] += 1
+        if budget_ms is not None:
+            self.shed_records.append(ShedRecord(
+                t_ms or 0.0, app, budget_ms, need_ms or 0.0,
+                fastest_ms or 0.0))
 
     # ---- post-run collection ----------------------------------------------
     def collect(self, sim) -> "Telemetry":
@@ -127,15 +162,51 @@ class Telemetry:
             st.exec.record(t.end_ms - t.start_ms)
             for j in t.jobs:
                 st.queue.record(max(t.start_ms - j.ready_ms, 0.0))
-            self.gpu_busy_ms += (t.end_ms - t.start_ms) * t.config.vgpu
+        # busy time integrates the *actual* fractional quota over time
+        # (vertical resizes included), not the dispatched config
+        self.gpu_busy_ms = sim.slice_busy_ms / SLICES_PER_VGPU
         cap = sum(inv.vgpus for inv in sim.invokers)
         self.gpu_capacity_ms = cap * horizon
+        self.gpu = sim.gpu_summary()
         for inst in sim.completed:
             lat = inst.finish_ms - inst.arrival_ms
             self.e2e.record(lat)
             self.completed += 1
             self.slo_hits += int(lat <= inst.slo_ms)
+        self._score_sheds(sim)
         return self
+
+    def _score_sheds(self, sim) -> None:
+        """Classify each shed decision as true/false/unknown (see module
+        docstring) against the realized latencies of admitted traffic."""
+        by_app: dict[str, tuple[list[float], list[float]]] = {}
+        for inst in sorted(sim.completed, key=lambda i: i.arrival_ms):
+            arr, lat = by_app.setdefault(inst.app.name, ([], []))
+            arr.append(inst.arrival_ms)
+            lat.append(inst.finish_ms - inst.arrival_ms)
+        self.shed_true = self.shed_false = self.shed_unknown = 0
+        for rec in self.shed_records:
+            if rec.budget_ms < rec.fastest_ms:
+                self.shed_true += 1      # provably doomed on an idle cluster
+                continue
+            arr_lat = by_app.get(rec.app)
+            if not arr_lat or not arr_lat[0]:
+                self.shed_unknown += 1
+                continue
+            arr, lat = arr_lat
+            i = bisect.bisect_left(arr, rec.t_ms)
+            if i > 0 and (i == len(arr) or
+                          rec.t_ms - arr[i - 1] <= arr[i] - rec.t_ms):
+                i -= 1                   # nearest completed arrival in time
+            if lat[i] > rec.budget_ms:
+                self.shed_true += 1
+            else:
+                self.shed_false += 1
+
+    def shed_precision(self) -> Optional[float]:
+        """True sheds over scored sheds; None when nothing was scorable."""
+        scored = self.shed_true + self.shed_false
+        return self.shed_true / scored if scored else None
 
     # ---- summaries ---------------------------------------------------------
     @property
@@ -177,6 +248,11 @@ class Telemetry:
             "total_cost": self.total_cost,
             "cold_starts": self.cold_starts,
             "utilization": self.utilization(),
+            "shed_true": self.shed_true,
+            "shed_false": self.shed_false,
+            "shed_unknown": self.shed_unknown,
+            "shed_precision": self.shed_precision(),
+            "gpu": dict(self.gpu),
             "latency": self.e2e.to_dict(),
             "per_stage": {
                 f"{app}/{stage}": {

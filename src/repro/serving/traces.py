@@ -17,14 +17,18 @@ Catalogue (``SCENARIOS``):
   * ``azure-tail``  — heavy-tailed (Lomax/Pareto-II) inter-arrivals, the
     shape reported for Azure Functions production traces.
   * ``skewed-mix``  — uniform arrivals but an 80/20 per-app traffic mix.
+  * ``trace-replay`` — replay a recorded ``(t_ms, app)`` CSV (real
+    Azure/production traces; see ``benchmarks/traces/``).
 
-Add a scenario by subclassing ``Scenario`` (override ``_interval``) and
-registering a factory in ``SCENARIOS``.
+Add a scenario by subclassing ``Scenario`` (override ``_interval``, or
+``arrivals`` for non-generative sources) and registering a factory in
+``SCENARIOS``.
 """
 from __future__ import annotations
 
 import dataclasses
 import math
+import zlib
 from typing import Callable, Optional, Sequence
 
 import numpy as np
@@ -203,6 +207,85 @@ class HeavyTailScenario(Scenario):
         return float(rng.pareto(self.alpha)) * scale
 
 
+class TraceReplayScenario(Scenario):
+    """Replay a recorded request trace of ``(t_ms, app)`` rows — the hook
+    for injecting real Azure/production traces instead of synthetic
+    processes.
+
+    Sources (first match wins): ``rows`` (list of ``(t_ms, app)``),
+    ``csv_path`` (CSV with a ``t_ms,app`` header, as shipped under
+    ``benchmarks/traces/``), else a small built-in bursty sample so the
+    scenario is usable straight from the catalogue.
+
+    Semantics:
+      * rows are sorted by time; ``time_scale`` stretches/compresses the
+        clock (2.0 = half the request rate);
+      * an ``app`` name not in ``app_names`` (e.g. a hashed production
+        function id, or the ``*`` wildcard) is remapped deterministically
+        (crc32 of ``name/uid``) onto ``app_names`` — seeds do not change
+        a replay, by design;
+      * when ``n`` exceeds the trace length the trace wraps, shifted by
+        one trace-period per lap (diurnal traces repeat day over day);
+      * timestamps are forced strictly increasing and positive.
+    """
+    name = "trace-replay"
+
+    def __init__(self, csv_path: Optional[str] = None,
+                 rows: Optional[Sequence[tuple[float, str]]] = None,
+                 time_scale: float = 1.0, **kw):
+        super().__init__(**kw)
+        if rows is None and csv_path is not None:
+            rows = self.read_csv(csv_path)
+        if rows is None:
+            rows = DEFAULT_TRACE_ROWS
+        if not rows:
+            raise ValueError("trace-replay: empty trace")
+        self.rows = sorted((float(t), str(app)) for t, app in rows)
+        self.time_scale = time_scale
+
+    @staticmethod
+    def read_csv(path: str) -> list[tuple[float, str]]:
+        """Parse a ``t_ms,app`` CSV (header required, extra cols ignored)."""
+        import csv as _csv
+        with open(path, newline="") as f:
+            reader = _csv.DictReader(f)
+            if reader.fieldnames is None or \
+                    not {"t_ms", "app"} <= set(reader.fieldnames):
+                raise ValueError(
+                    f"{path}: trace CSV needs a 't_ms,app' header, "
+                    f"got {reader.fieldnames}")
+            return [(float(r["t_ms"]), r["app"].strip()) for r in reader]
+
+    def arrivals(self, app_names: Sequence[str], n: int,
+                 seed: int = 0) -> list[Arrival]:
+        known = set(app_names)
+        span = self.rows[-1][0] + \
+            max(self.rows[-1][0] / len(self.rows), 1.0)   # wrap period
+        out = []
+        t_prev = 0.0
+        for uid in range(n):
+            lap, i = divmod(uid, len(self.rows))
+            t_raw, app = self.rows[i]
+            t = (t_raw + lap * span) * self.time_scale
+            t = max(t, t_prev + 1e-6)                     # strictly increasing
+            t_prev = t
+            if app not in known:
+                app = app_names[zlib.crc32(f"{app}/{uid}".encode())
+                                % len(app_names)]
+            out.append(Arrival(uid, t, app))
+        return out
+
+
+# Built-in sample: a quiet->burst->quiet day fragment (wildcard apps are
+# remapped onto whatever app set the run serves).
+DEFAULT_TRACE_ROWS: list[tuple[float, str]] = [
+    (float(t), "*") for t in
+    list(range(40, 2000, 70)) +          # quiet: ~14 req/s-equivalent spacing
+    list(range(2000, 2600, 12)) +        # burst window: ~6x denser
+    list(range(2600, 4600, 55))          # recovery
+]
+
+
 def _uniform_factory(load: str) -> Callable[..., Scenario]:
     lo, hi = INTERVALS_MS[load]
     return lambda **kw: UniformScenario(lo, hi, **kw)
@@ -218,6 +301,7 @@ SCENARIOS: dict[str, Callable[..., Scenario]] = {
     "azure-tail": HeavyTailScenario,
     "skewed-mix": lambda **kw: UniformScenario(
         20.0, 33.6, **{"app_weights": None, **kw}),
+    "trace-replay": TraceReplayScenario,
 }
 
 
