@@ -1,0 +1,134 @@
+"""Weight-locality sweep: memory-blind vs memory-aware placement, with
+and without shared read-only weights, under finite HBM.
+
+For each serving scenario the same trace runs through the same ESG
+scheduler and warm-pool policy under three weight-residency regimes:
+
+  * ``blind``       — PR-2 defaults: paper-§3.4 locality placement,
+                      per-container weight copies (Torpor's thrash case);
+  * ``memory``      — ``placement="memory"``: the fallback leg of
+                      placement ranks invokers hot > warm > cold by the
+                      restart penalty their warm state implies, and the
+                      ESG planner prices the predicted swap-in into its
+                      A* search; still per-container copies;
+  * ``mem+shared``  — ``memory`` plus ``shared_weights=True``: all
+                      containers of one function on a device map a single
+                      refcounted checkpoint, so N containers charge
+                      ``model_mb`` once (Torpor's pool-density win).
+
+Invokers carry finite HBM (``--hbm-mb`` per vGPU) so the hot/warm tiers
+matter.  The point of the figure: ``mem+shared`` must *strictly* reduce
+swap-ins vs ``blind`` and improve SLO attainment or $/1k requests — the
+acceptance bar the differential test harness also enforces.
+
+    PYTHONPATH=src python benchmarks/locality_sweep.py --smoke
+    PYTHONPATH=src python benchmarks/locality_sweep.py --seed 7 \
+        --scenarios mmpp azure-tail --hbm-mb 384
+
+Deterministic under --seed (same seed => identical table).
+"""
+from __future__ import annotations
+
+import argparse
+
+import scenario_sweep
+from common import write_csv
+from repro.serving import format_table
+
+SCENARIO_NAMES = ["uniform-normal", "diurnal", "mmpp", "flash-crowd",
+                  "azure-tail", "trace-replay"]
+# mode -> (ESG placement, shared_weights)
+MODES = {"blind": ("locality", False),
+         "memory": ("memory", False),
+         "mem+shared": ("memory", True)}
+
+CSV_COLS = ["scenario", "mode", "placement", "shared_weights",
+            "slo_attainment", "cost_per_1k", "completed", "shed",
+            "cold_starts", "swap_ins", "swap_in_ms", "demotions",
+            "hot_hits", "shared_hits", "hbm_peak_mb", "utilization",
+            "p95_ms"]
+
+EXTRA_TABLE_COLS = [("mode", "mode", "{}"),
+                    ("swap_ins", "swaps", "{}"),
+                    ("demotions", "demo", "{}"),
+                    ("shared_hits", "shrd", "{}")]
+
+
+def run_cell(scenario_name: str, mode: str, n: int, seed: int,
+             slo_mult: float, hbm_mb: float, autoscaler: str,
+             trace_csv: str | None = None) -> dict:
+    placement, shared = MODES[mode]
+    s = scenario_sweep.run_cell(scenario_name, "ESG", autoscaler, n, seed,
+                                slo_mult, hbm_mb=hbm_mb,
+                                trace_csv=trace_csv, shared_weights=shared,
+                                sched_kw={"placement": placement})
+    s["mode"] = mode
+    s["placement"] = placement
+    s["shared_weights"] = shared
+    for k in ("swap_ins", "swap_in_ms", "demotions", "hot_hits",
+              "shared_hits", "hbm_peak_mb"):
+        s[k] = s["gpu"][k]
+    return s
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="small n / scenario subset for CI")
+    ap.add_argument("--n", type=int, default=None)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--slo-mult", type=float, default=1.0)
+    ap.add_argument("--hbm-mb", type=float, default=512.0,
+                    help="HBM per vGPU slice-unit (MB); finite so weight "
+                         "residency is a real constraint")
+    ap.add_argument("--autoscaler", default="ewma",
+                    choices=["ewma", "finegrained", "vertical", "none"])
+    ap.add_argument("--scenarios", nargs="*", default=None)
+    ap.add_argument("--trace-csv", default=None,
+                    help="CSV for trace-replay (default: built-in sample)")
+    args = ap.parse_args()
+
+    scenarios = args.scenarios or SCENARIO_NAMES
+    n = args.n
+    if args.smoke:
+        scenarios = args.scenarios or ["mmpp", "azure-tail"]
+        n = n or 40
+    n = n or 200
+
+    rows, by_cell = [], {}
+    for sc in scenarios:
+        for mode in MODES:
+            s = run_cell(sc, mode, n, args.seed, args.slo_mult,
+                         args.hbm_mb, args.autoscaler, args.trace_csv)
+            rows.append(s)
+            by_cell[(sc, mode)] = s
+    print(format_table(rows, extra_cols=EXTRA_TABLE_COLS))
+
+    wins = []
+    for sc in scenarios:
+        b, m = by_cell[(sc, "blind")], by_cell[(sc, "mem+shared")]
+        fewer_swaps = m["swap_ins"] < b["swap_ins"]
+        better_slo = m["slo_attainment"] > b["slo_attainment"] + 1e-9
+        cheaper = m["cost_per_1k"] < b["cost_per_1k"] - 1e-9
+        win = fewer_swaps and (better_slo or cheaper)
+        if win:
+            wins.append(sc)
+        print(f"[locality-sweep] {sc:14s} mem+shared vs blind: "
+              f"swaps {m['swap_ins']} vs {b['swap_ins']}, "
+              f"slo {m['slo_attainment']:.3f} vs {b['slo_attainment']:.3f}, "
+              f"$/1k {m['cost_per_1k']:.4f} vs {b['cost_per_1k']:.4f} "
+              f"{'WIN' if win else '-'}")
+    verdict = (f"mem+shared beats blind on {len(wins)}/{len(scenarios)} "
+               f"scenarios: {wins}" if wins else
+               "mem+shared did not beat blind anywhere (unexpected)")
+    print(f"[locality-sweep] {verdict}")
+
+    path = write_csv("locality_sweep", CSV_COLS,
+                     scenario_sweep.rows_to_csv(rows, CSV_COLS))
+    print(f"[locality-sweep] n={n} seed={args.seed} "
+          f"hbm={args.hbm_mb:.0f}MB/vGPU -> {path}")
+    return 0 if len(wins) == len(scenarios) else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -34,16 +34,18 @@ CSV_COLS = ["scenario", "scheduler", "autoscaler", "injected", "admitted",
 def run_cell(scenario_name: str, scheduler: str, autoscaler: str,
              n: int, seed: int, slo_mult: float,
              count_overhead: bool = False, hbm_mb: float | None = None,
-             trace_csv: str | None = None) -> dict:
+             trace_csv: str | None = None, shared_weights: bool = False,
+             sched_kw: dict | None = None) -> dict:
     tables = paper_tables()
     # count_overhead folds *measured wall-clock* search time into simulated
     # latency (the Fig 9/10 methodology) — off by default here so the sweep
     # is bit-deterministic under --seed
     sim = ClusterSim(PAPER_APPS, tables, PAPER_FUNCTIONS,
-                     make_scheduler(scheduler, tables), seed=seed,
+                     make_scheduler(scheduler, tables, **(sched_kw or {})),
+                     seed=seed,
                      autoscaler=get_autoscaler(autoscaler),
                      count_overhead=count_overhead,
-                     hbm_per_vgpu_mb=hbm_mb)
+                     hbm_per_vgpu_mb=hbm_mb, shared_weights=shared_weights)
     gw = Gateway(sim)
     kw = {"csv_path": trace_csv} if (
         scenario_name == "trace-replay" and trace_csv) else {}

@@ -34,7 +34,7 @@ import numpy as np
 from repro.core.profiles import (Config, FunctionProfile, ProfileTable,
                                  VCPU_PRICE_PER_H, VGPU_PRICE_PER_H)
 from repro.core.workflows import Workflow
-from repro.gpu import COLD, DeviceModel, SLICES_PER_VGPU, WARM, swap_in_ms
+from repro.gpu import COLD, DeviceModel, SLICES_PER_VGPU
 
 KEEPALIVE_MS = 600_000.0          # OpenWhisk 10-minute keep-alive
 LOCAL_TRANSFER_MS = 1.0
@@ -114,13 +114,15 @@ class Invoker:
 
     def __init__(self, idx: int, vcpus: int, vgpus: int,
                  hbm_per_vgpu_mb: Optional[float] = None,
-                 footprints: Optional[dict[str, float]] = None):
+                 footprints: Optional[dict[str, float]] = None,
+                 shared_weights: bool = False):
         self.idx = idx
         self.vcpus = vcpus
         self.vgpus = vgpus
         self.free_vcpu = vcpus
         self.footprints = footprints or {}
-        self.device = DeviceModel(vgpus, hbm_per_vgpu_mb=hbm_per_vgpu_mb)
+        self.device = DeviceModel(vgpus, hbm_per_vgpu_mb=hbm_per_vgpu_mb,
+                                  shared_weights=shared_weights)
 
     @property
     def free_vgpu(self) -> float:
@@ -143,6 +145,19 @@ class Invoker:
     def has_warm(self, func: str, now: float) -> bool:
         return self.device.has_warm(func, now)
 
+    def residency(self, func: str, now: float) -> str:
+        """Warm-state tier a start of ``func`` would pay here (hot/warm/cold).
+        ``now`` is required: querying stale pools without a GC sweep
+        would report expired containers as live."""
+        return self.device.residency(func, now)
+
+    def start_penalty_ms(self, func: str, cold_ms: Optional[float],
+                         now: float) -> float:
+        """Predicted restart penalty of starting ``func`` on this invoker
+        at ``now`` — the memory-aware placement/planning ranking term."""
+        return self.device.swap_cost_ms(func, self.model_mb(func), now,
+                                        cold_ms)
+
 
 # ---------------------------------------------------------------------------
 # Scheduler protocol
@@ -150,8 +165,15 @@ class Invoker:
 class SchedulerPolicy:
     """Interface the emulator drives.  ``plan`` returns a priority-ordered
     list of configs for the queue's *current* stage (paper: configPQ);
-    ``placement`` is 'locality' (ESG/Orion/Aquatope) or 'fragmentation'
-    (INFless/FaST-GShare)."""
+    ``placement`` is 'locality' (ESG/Orion/Aquatope), 'fragmentation'
+    (INFless/FaST-GShare) or 'memory' (weight-locality-aware: the paper's
+    locality order still leads — data transfer dominates — but the
+    fallback ranks invokers by the restart penalty their warm state
+    implies: hot weights > host-staged weights > cold, Torpor-style).
+    With unbounded HBM no weights are ever demoted, every fallback
+    candidate's penalty class collapses to has-warm/cold and 'memory'
+    reproduces 'locality' bit-for-bit (the differential tests pin this).
+    """
     name = "base"
     placement = "locality"
     charged_overhead_ms = 0.0
@@ -185,16 +207,19 @@ class ClusterSim:
                  initial_warm: int = 2,
                  autoscaler: Any = None,
                  admission: Optional[Callable] = None,
-                 hbm_per_vgpu_mb: Optional[float] = None):
+                 hbm_per_vgpu_mb: Optional[float] = None,
+                 shared_weights: bool = False):
         self.apps = apps
         self.tables = tables
         self.profiles = profiles
         self.sched = scheduler
+        self.shared_weights = shared_weights
         footprints = {n: getattr(p, "model_mb", 0.0)
                       for n, p in profiles.items()}
         self.invokers = [Invoker(i, vcpus, vgpus,
                                  hbm_per_vgpu_mb=hbm_per_vgpu_mb,
-                                 footprints=footprints)
+                                 footprints=footprints,
+                                 shared_weights=shared_weights)
                          for i in range(n_invokers)]
         self.noise_sigma = noise_sigma
         self.rng = np.random.default_rng(seed)
@@ -382,10 +407,27 @@ class ClusterSim:
         return False
 
     # ---- placement ---------------------------------------------------------
+    def _locality_order(self, app: Workflow, stage: str,
+                        jobs: list[Job]) -> list[int]:
+        """Paper-§3.4 data-locality preference: the stable home invoker
+        for root stages, else the predecessors' invokers by frequency."""
+        preds = app.predecessors(stage)
+        order: list[int] = []
+        if not preds:
+            order.append(home_invoker(app.name, app.func_of[stage],
+                                      len(self.invokers)))
+        else:
+            pred_invs = [j.inst.stage_invoker.get(p)
+                         for j in jobs for p in preds]
+            pred_invs = [p for p in pred_invs if p is not None]
+            if pred_invs:
+                vals, counts = np.unique(pred_invs, return_counts=True)
+                order.extend(int(v) for v in vals[np.argsort(-counts)])
+        return order
+
     def _place(self, app: Workflow, stage: str, jobs: list[Job],
                cfg: Config) -> Optional[int]:
         func = app.func_of[stage]
-        n = len(self.invokers)
         if self.sched.placement == "fragmentation":
             # best-fit: minimise leftover GPU after placement (INFless/FaST)
             best, best_left = None, None
@@ -395,21 +437,30 @@ class ClusterSim:
                     if best_left is None or left < best_left:
                         best, best_left = inv.idx, left
             return best
-        # locality policy (paper §3.4)
-        preds = app.predecessors(stage)
-        order: list[int] = []
-        if not preds:
-            order.append(home_invoker(app.name, func, n))
-        else:
-            pred_invs = [j.inst.stage_invoker.get(p)
-                         for j in jobs for p in preds]
-            pred_invs = [p for p in pred_invs if p is not None]
-            if pred_invs:
-                vals, counts = np.unique(pred_invs, return_counts=True)
-                order.extend(int(v) for v in vals[np.argsort(-counts)])
+        # locality preference first (paper §3.4) — shared by the 'locality'
+        # and 'memory' policies: avoiding a remote predecessor transfer is
+        # worth more than any swap-in, and keeping this leg identical is
+        # what lets 'memory' degrade to 'locality' bit-for-bit when HBM
+        # is unbounded
+        order = self._locality_order(app, stage, jobs)
         for idx in order:
             if self.invokers[idx].fits(cfg, func, self.now):
                 return idx
+        if self.sched.placement == "memory":
+            # weight-locality fallback: rank the remaining candidates by
+            # the restart penalty their warm state implies (hot weights 0
+            # < host-staged swap_in_ms < full cold start), breaking ties
+            # exactly like the legacy warm/cold steps (most free first) —
+            # the swap-in is paid once per attach, never per container,
+            # when the device ledger shares read-only weights
+            cold_ms = self.profiles[func].cold_ms
+            rest = [i for i in self.invokers
+                    if i.idx not in order and i.fits(cfg, func, self.now)]
+            if not rest:
+                return None
+            return min(rest, key=lambda i: (
+                i.start_penalty_ms(func, cold_ms, self.now),
+                -i.free_vgpu, -i.free_vcpu, i.idx)).idx
         # other warm invokers
         warm = [i for i in self.invokers
                 if i.has_warm(func, self.now) and i.fits(cfg, func, self.now)
@@ -449,18 +500,19 @@ class ClusterSim:
                         REMOTE_TRANSFER_MS_PER_MB * self.profiles[func].input_mb)
 
         slices = cfg.vgpu * SLICES_PER_VGPU
+        # the predicted restart penalty IS the billed one — hot: free;
+        # warm: the Torpor-style swap-in transfer (weights were demoted
+        # to host RAM), not a full cold start; cold: full cold start,
+        # discounted by the weight-load component when shared weights
+        # are already resident via a running peer (see
+        # ``DeviceModel.swap_cost_ms``)
+        penalty_ms = inv.start_penalty_ms(func, self.profiles[func].cold_ms,
+                                          self.now)
         alloc, tier = inv.device.start(func, slices, inv.model_mb(func),
                                        self.now)
         cold = tier == COLD
         if cold:
             self.cold_starts += 1
-            penalty_ms = self.profiles[func].cold_ms
-        elif tier == WARM:
-            # container exists but its weights were demoted to host RAM:
-            # pay the Torpor-style swap-in transfer, not a full cold start
-            penalty_ms = swap_in_ms(inv.model_mb(func))
-        else:
-            penalty_ms = 0.0
 
         noise = float(np.clip(
             1.0 + self.rng.normal(0.0, self.noise_sigma), 0.5, 2.0))
@@ -569,4 +621,5 @@ class ClusterSim:
             "resizes_down": sum(d.stats.resizes_down for d in devs),
             "hbm_peak_mb": max((d.stats.hbm_peak_mb for d in devs),
                                default=0.0),
+            "shared_hits": sum(d.stats.shared_hits for d in devs),
         }

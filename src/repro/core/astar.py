@@ -21,17 +21,36 @@ The heuristic (suffix minimum cost) is admissible and consistent, so nodes
 pop in nondecreasing f = g + h order and the first K completed paths are
 exactly the K cheapest feasible ones (verified against brute force in
 tests/test_astar.py).
+
+``penalties_ms`` (one entry per stage, optional) prices a predicted
+placement start penalty — e.g. the Torpor-style weight swap-in a
+memory-aware placement expects to pay — into the stage's table before
+the search (``ProfileTable.with_penalty``): the time blade then prunes
+against the *true* latency including the swap, and the cost blade bills
+the penalty window at each config's $-rate.  A zero penalty leaves the
+stage's table untouched, so memory-blind callers are bit-identical.
 """
 from __future__ import annotations
 
 import dataclasses
 import heapq
 import itertools
-from typing import Optional
+from typing import Optional, Sequence
 
 import numpy as np
 
 from repro.core.profiles import Config, ProfileTable
+
+
+def _priced(tables: list[ProfileTable],
+            penalties_ms: Optional[Sequence[float]]) -> list[ProfileTable]:
+    if penalties_ms is None:
+        return tables
+    if len(penalties_ms) != len(tables):
+        raise ValueError(
+            f"penalties_ms has {len(penalties_ms)} entries "
+            f"for {len(tables)} stages")
+    return [t.with_penalty(p) for t, p in zip(tables, penalties_ms)]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -50,8 +69,10 @@ class SearchStats:
 
 
 def esg_1q(tables: list[ProfileTable], g_slo_ms: float, k: int = 5,
-           stats: Optional[SearchStats] = None) -> list[PathResult]:
+           stats: Optional[SearchStats] = None,
+           penalties_ms: Optional[Sequence[float]] = None) -> list[PathResult]:
     """K cheapest SLO-feasible config paths over ``tables`` (one per stage)."""
+    tables = _priced(tables, penalties_ms)
     n = len(tables)
     if n == 0:
         return []
@@ -120,8 +141,11 @@ def esg_1q(tables: list[ProfileTable], g_slo_ms: float, k: int = 5,
 
 
 def brute_force(tables: list[ProfileTable], g_slo_ms: float,
-                k: int = 5) -> list[PathResult]:
+                k: int = 5,
+                penalties_ms: Optional[Sequence[float]] = None
+                ) -> list[PathResult]:
     """Reference enumeration (exponential) — test oracle + Fig 9 baseline."""
+    tables = _priced(tables, penalties_ms)
     paths = []
     for combo in itertools.product(*[range(len(t.configs)) for t in tables]):
         t = sum(float(tables[i].times[j]) for i, j in enumerate(combo))

@@ -165,6 +165,23 @@ class ProfileTable:
                             [self.configs[i] for i in keep],
                             self.times[keep], self.job_costs[keep])
 
+    def with_penalty(self, penalty_ms: float) -> "ProfileTable":
+        """Price a per-stage start penalty (a Torpor-style weight swap-in
+        the placement is predicted to pay) into both A* blades: every
+        config's latency shifts by ``penalty_ms`` (sort order preserved)
+        and its per-job cost absorbs the penalty window billed at that
+        config's $-rate — so dual-blade pruning compares true latencies
+        and true costs, not profile-only ones."""
+        if penalty_ms <= 0.0:
+            return self
+        rates = np.array([c.vcpu * VCPU_PRICE_PER_H + c.vgpu * VGPU_PRICE_PER_H
+                          for c in self.configs])
+        batches = np.array([c.batch for c in self.configs], dtype=float)
+        return ProfileTable(self.fn, list(self.configs),
+                            self.times + penalty_ms,
+                            self.job_costs +
+                            rates * penalty_ms / 3.6e6 / batches)
+
     @property
     def min_time(self) -> float:
         return float(self.times[0])

@@ -14,6 +14,19 @@ Per queue-scheduling call (paper Fig 2(d)):
 
 ESG re-plans at *every* stage dispatch — the paper's optimality-guided
 adaptive behaviour (vs Orion/Aquatope's static whole-workflow plans).
+
+``placement="memory"`` (weight-locality-aware mode, off by default) does
+two things: the emulator's placement ranks fallback invokers by the
+restart penalty their warm state implies (see ``ClusterSim._place``),
+and the planner prices the *predicted* Torpor-style swap-in penalty of
+each remaining stage into the A* search (``esg_1q(penalties_ms=...)``)
+so dual-blade pruning compares true latencies.  Only the swap component
+is priced — when some invoker still holds the function's weights hot the
+penalty is zero, and cold-start container provisioning stays out of the
+plan exactly as in the legacy planner — so with unbounded HBM (where
+nothing is ever demoted) memory-aware planning is bit-identical to the
+default.  The baselines (Orion/Aquatope/INFless/FaST-GShare) stay
+memory-blind for a fair fig6/fig7 contrast.
 """
 from __future__ import annotations
 
@@ -27,6 +40,7 @@ from repro.core.dominator import ScheduleGroup, distribute_slo
 from repro.core.profiles import Config, ProfileTable
 from repro.core.workflows import Workflow
 from repro.cluster.emulator import ClusterSim, Job, SchedulerPolicy
+from repro.gpu import HOT, WARM, swap_in_ms
 
 
 class ESGScheduler(SchedulerPolicy):
@@ -36,7 +50,12 @@ class ESGScheduler(SchedulerPolicy):
     def __init__(self, apps: dict[str, Workflow],
                  tables: dict[str, ProfileTable],
                  k: int = 5, group_size: int = 3,
-                 pareto: bool = False, risk_sigma: float = 0.0):
+                 pareto: bool = False, risk_sigma: float = 0.0,
+                 placement: str = "locality"):
+        if placement not in ("locality", "memory"):
+            raise ValueError(f"ESG placement must be 'locality' or "
+                             f"'memory', got {placement!r}")
+        self.placement = placement
         self.tables = tables
         self.k = k
         self.pareto = pareto
@@ -63,6 +82,26 @@ class ESGScheduler(SchedulerPolicy):
                             for s in app.stages if pos[s] >= pos[stage]}
         total = sum(remaining_groups.values())
         return group.slo_fraction / total if total > 0 else 1.0
+
+    # -- predicted weight-swap penalty per stage (memory-aware planning) ---
+    def _predicted_swap_ms(self, sim: ClusterSim, func: str) -> float:
+        """Swap-in penalty the memory-aware placement is predicted to pay
+        for ``func``: 0 when any invoker still holds the weights hot (the
+        placement will steer there), ``swap_in_ms`` when the best warm
+        state anywhere is host-staged weights, and 0 when the function is
+        cold everywhere (container provisioning is not a swap cost and
+        stays unpriced, as in the legacy planner — this also keeps
+        unbounded-HBM runs, which never demote, bit-identical)."""
+        warm_somewhere = False
+        for inv in sim.invokers:
+            r = inv.residency(func, sim.now)
+            if r == HOT:
+                return 0.0
+            if r == WARM:
+                warm_somewhere = True
+        if warm_somewhere:
+            return swap_in_ms(sim.invokers[0].model_mb(func))
+        return 0.0
 
     def plan(self, sim: ClusterSim, app: Workflow, stage: str,
              jobs: list[Job], now: float) -> list[Config]:
@@ -94,7 +133,15 @@ class ESGScheduler(SchedulerPolicy):
         margin = sum(self.tables[f].fn.input_mb * 8.0 + 25.0 for f in funcs)
         g_slo = max((g_slo - margin) / self.time_inflation, 1.0)
 
-        results = esg_1q(tables, g_slo, k=self.k)
+        # memory-aware mode: price each remaining stage's predicted
+        # weight-swap penalty into the search so the configPQ is ranked
+        # by true (swap-inclusive) latency and cost
+        penalties = None
+        if self.placement == "memory" and getattr(sim, "invokers", None):
+            penalties = [self._predicted_swap_ms(sim, f) for f in funcs]
+            if not any(penalties):
+                penalties = None
+        results = esg_1q(tables, g_slo, k=self.k, penalties_ms=penalties)
         out = [r.configs[0] for r in results]
         if len(out) == 1 and results[0].est_time_ms >= g_slo:
             # infeasible target: best-effort fastest path, with cheaper

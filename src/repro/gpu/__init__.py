@@ -8,11 +8,12 @@ model-state swap tiers).
 """
 from repro.gpu.device import (COLD, HOT, MIN_SLICES, SLICES_PER_VGPU, WARM,
                               Allocation, DeviceModel, DeviceStats,
-                              OversubscribedError, WarmContainer)
-from repro.gpu.footprints import PAPER_MODEL_MB, swap_in_ms
+                              OversubscribedError, WarmContainer, WeightSet)
+from repro.gpu.footprints import PAPER_MODEL_MB, swap_in_ms, tier_penalty_ms
 
 __all__ = [
     "Allocation", "COLD", "DeviceModel", "DeviceStats", "HOT",
     "MIN_SLICES", "OversubscribedError", "PAPER_MODEL_MB",
-    "SLICES_PER_VGPU", "WARM", "WarmContainer", "swap_in_ms",
+    "SLICES_PER_VGPU", "WARM", "WarmContainer", "WeightSet",
+    "swap_in_ms", "tier_penalty_ms",
 ]

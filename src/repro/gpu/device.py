@@ -24,10 +24,21 @@ container stays hot — this is exactly the pre-device-model emulator
 behaviour, so legacy runs reproduce bit-for-bit.  Pass a finite value to
 turn memory into a real constraint.
 
+``shared_weights=True`` switches the HBM ledger to Torpor's read-only
+weight sharing: all containers of one function on the device map the
+same resident checkpoint, so N containers charge ``model_mb`` *once*,
+refcounted in a per-function :class:`WeightSet` (running allocations pin
+the set; idle keep-alive containers reference it but leave it demotable).
+Demotion and swap-in then act on the whole function at once — every
+sibling container flips tier together, because they share the bytes.
+The default ``shared_weights=False`` keeps the PR-2 per-container-copy
+accounting bit-for-bit.
+
 Every mutation re-verifies the oversubscription invariants (slices,
-HBM, per-allocation floors) and raises :class:`OversubscribedError` on
-violation — the property tests drive random alloc/resize/release/swap
-sequences straight through the public API.
+HBM, refcounts, per-allocation floors) and raises
+:class:`OversubscribedError` on violation — the property tests drive
+random alloc/resize/release/swap sequences straight through the public
+API.
 """
 from __future__ import annotations
 
@@ -35,20 +46,17 @@ import bisect
 import dataclasses
 import itertools
 import math
-from collections import defaultdict
+from collections import Counter, defaultdict
 from typing import Optional
 
-from repro.gpu.footprints import swap_in_ms
+from repro.gpu.footprints import (COLD, HOT, WARM, swap_in_ms,
+                                  tier_penalty_ms)
 
 # Quota lattice resolution: 1/4 vGPU.  The scheduler's integer-vGPU
 # configuration lattice maps onto it as ``cfg.vgpu * SLICES_PER_VGPU``;
 # vertical resizes move in single-slice steps.
 SLICES_PER_VGPU = 4
 MIN_SLICES = 1
-
-HOT = "hot"      # weights resident in HBM
-WARM = "warm"    # weights in host RAM (swap-in penalty on start)
-COLD = "cold"    # no container anywhere (full cold start)
 
 
 class OversubscribedError(RuntimeError):
@@ -70,8 +78,24 @@ class WarmContainer:
     """One keep-alive pool entry."""
     func: str
     expiry: float
-    hbm_mb: float            # resident bytes (0 once demoted)
+    hbm_mb: float            # resident bytes (0 once demoted, or shared)
     tier: str                # HOT | WARM
+
+
+@dataclasses.dataclass
+class WeightSet:
+    """Refcounted read-only weight residency for one function on one
+    device (``shared_weights`` mode): N containers charge ``mb`` once.
+
+    ``resident`` stays True even for 0-byte footprints so unknown
+    functions behave exactly like the per-copy ledger; ``mb`` is the
+    HBM actually charged (0 once demoted to host RAM).
+    """
+    func: str
+    mb: float = 0.0
+    resident: bool = False
+    run_refs: int = 0        # running allocations pinning the set
+    warm_refs: int = 0       # idle keep-alive containers referencing it
 
 
 @dataclasses.dataclass
@@ -85,12 +109,14 @@ class DeviceStats:
     resizes_up: int = 0
     resizes_down: int = 0
     hbm_peak_mb: float = 0.0
+    shared_hits: int = 0     # starts that mapped weights a peer had pinned
 
 
 class DeviceModel:
     def __init__(self, vgpus: int,
                  hbm_per_vgpu_mb: Optional[float] = None,
-                 slices_per_vgpu: int = SLICES_PER_VGPU):
+                 slices_per_vgpu: int = SLICES_PER_VGPU,
+                 shared_weights: bool = False):
         self.vgpus = vgpus
         self.slices_per_vgpu = slices_per_vgpu
         self.total_slices = vgpus * slices_per_vgpu
@@ -98,6 +124,8 @@ class DeviceModel:
         self.hbm_total_mb = (math.inf if hbm_per_vgpu_mb is None
                              else vgpus * hbm_per_vgpu_mb)
         self.hbm_used_mb = 0.0
+        self.shared_weights = shared_weights
+        self.weights: dict[str, WeightSet] = {}
         self._gc_now = -math.inf
         self.pools: dict[str, list[WarmContainer]] = defaultdict(list)
         self.allocs: dict[int, Allocation] = {}
@@ -129,24 +157,86 @@ class DeviceModel:
             return
         self._gc_now = now
         for func, pool in self.pools.items():
-            live = []
+            live, dropped = [], 0
             for c in pool:
                 if c.expiry < now:
                     self.hbm_used_mb -= c.hbm_mb
+                    dropped += 1
                 else:
                     live.append(c)
-            if len(live) != len(pool):
+            if dropped:
                 self.pools[func][:] = live
+                if self.shared_weights:
+                    self._drop_warm_refs(func, dropped)
+
+    # ---- shared-weights ledger helpers ------------------------------------
+    def _ws(self, func: str) -> WeightSet:
+        ws = self.weights.get(func)
+        if ws is None:
+            ws = self.weights[func] = WeightSet(func)
+        return ws
+
+    def _drop_warm_refs(self, func: str, k: int) -> None:
+        """k idle containers of ``func`` went away; free the weight set
+        once nothing references it any more."""
+        ws = self.weights.get(func)
+        if ws is None:
+            return
+        ws.warm_refs -= k
+        if ws.run_refs <= 0 and ws.warm_refs <= 0:
+            self.hbm_used_mb -= ws.mb
+            del self.weights[func]
+
+    def _resident(self, func: str) -> bool:
+        ws = self.weights.get(func)
+        return ws is not None and ws.resident
+
+    def _pool_min_expiry(self, func: str) -> float:
+        return min((c.expiry for c in self.pools[func]), default=math.inf)
+
+    def _load_shared(self, func: str, model_mb: float) -> None:
+        """Charge ``func``'s shared weight set and (re-)promote every
+        sibling keep-alive container — they map the same bytes."""
+        ws = self._ws(func)
+        need = self._capped(model_mb)
+        self.hbm_used_mb += need
+        ws.mb = need
+        ws.resident = True
+        for c in self.pools[func]:
+            c.tier = HOT
 
     def _demotable_mb(self, exclude_func: Optional[str] = None) -> float:
+        if self.shared_weights:
+            return sum(ws.mb for ws in self.weights.values()
+                       if ws.run_refs == 0 and ws.mb > 0
+                       and ws.func != exclude_func)
         return sum(c.hbm_mb for func, pool in self.pools.items()
                    for c in pool
                    if c.tier == HOT and func != exclude_func)
 
     def _ensure_hbm(self, need_mb: float) -> None:
         """Demote idle hot containers (earliest-expiry ~ LRU first) until
-        ``need_mb`` fits.  Caller must have verified feasibility."""
+        ``need_mb`` fits.  Caller must have verified feasibility.  In
+        shared mode the victim is a whole weight set (no running pins):
+        its resident bytes go to host and every sibling container flips
+        to the warm tier together."""
         while self.free_hbm_mb < need_mb:
+            if self.shared_weights:
+                victims = [ws for ws in self.weights.values()
+                           if ws.run_refs == 0 and ws.mb > 0]
+                if not victims:
+                    raise OversubscribedError(
+                        f"need {need_mb:.0f} MB HBM, "
+                        f"free {self.free_hbm_mb:.0f} MB, nothing demotable")
+                ws = min(victims,
+                         key=lambda w: self._pool_min_expiry(w.func))
+                self.hbm_used_mb -= ws.mb
+                ws.mb = 0.0
+                ws.resident = False
+                for c in self.pools[ws.func]:
+                    c.tier = WARM
+                self.stats.demotions += 1
+                continue
             victims = [c for pool in self.pools.values() for c in pool
                        if c.tier == HOT and c.hbm_mb > 0]
             if not victims:
@@ -170,14 +260,13 @@ class DeviceModel:
         HBM feasibility counts weights already resident in a hot warm
         container for ``func`` (they would be reused, costing nothing)
         and idle hot containers of *other* functions (they can be
-        demoted to host to make room)."""
+        demoted to host to make room).  With ``shared_weights`` the
+        whole check runs against the refcounted weight ledger: resident
+        weights admit any number of sibling containers for free."""
         self._gc(now)
         if slices > self.free_slices:
             return False
-        if func is not None and self._hot(func):
-            return True                      # hot reuse: no new HBM needed
-        need = self._capped(model_mb)
-        return need <= self.free_hbm_mb + self._demotable_mb(func)
+        return self._hbm_feasible(model_mb, func)
 
     def hbm_admits(self, model_mb: float, func: Optional[str] = None,
                    now: float = 0.0) -> bool:
@@ -185,10 +274,51 @@ class DeviceModel:
         vertical autoscaler avoid shrinking quotas for a placement that
         memory would reject anyway."""
         self._gc(now)
-        if func is not None and self._hot(func):
-            return True
-        return self._capped(model_mb) <= \
-            self.free_hbm_mb + self._demotable_mb(func)
+        return self._hbm_feasible(model_mb, func)
+
+    def _hbm_feasible(self, model_mb: float, func: Optional[str]) -> bool:
+        if func is not None:
+            if self.shared_weights:
+                if self._resident(func):
+                    return True              # shared reuse: no new HBM
+            elif self._hot(func):
+                return True                  # hot reuse: no new HBM needed
+        need = self._capped(model_mb)
+        return need <= self.free_hbm_mb + self._demotable_mb(func)
+
+    # ---- residency queries (memory-aware placement / planning) ------------
+    def residency(self, func: str, now: float) -> str:
+        """Warm-state tier the *next* container start of ``func`` would
+        pay: HOT (a hot keep-alive container exists — free restart),
+        WARM (a container exists but its weights live in host RAM —
+        swap-in penalty), COLD (nothing — full cold start)."""
+        self._gc(now)
+        pool = self.pools.get(func, ())
+        if any(c.tier == HOT for c in pool):
+            return HOT
+        if pool:
+            return WARM
+        return COLD
+
+    def swap_cost_ms(self, func: str, model_mb: float, now: float,
+                     cold_ms: Optional[float] = None) -> float:
+        """Predicted restart penalty of starting ``func`` on this device
+        right now (0 hot / ``swap_in_ms`` warm / ``cold_ms`` cold; with
+        no ``cold_ms`` the weight-load lower bound is used for COLD).
+
+        Shared-weights refinement: when the pool is empty but a *peer*
+        container keeps the function's weights resident, a new container
+        still cold-boots — yet its weight load is a free mapping, so the
+        cold penalty is discounted by the weight-load component.  This
+        is also what the emulator bills, and it is what makes
+        memory-aware placement prefer weight-dense invokers even when
+        every keep-alive container of the function is busy."""
+        tier = self.residency(func, now)
+        if tier == COLD and self.shared_weights and self._resident(func):
+            if cold_ms is None:
+                return 0.0
+            return max(cold_ms - swap_in_ms(model_mb), 0.0)
+        return tier_penalty_ms(tier, model_mb, cold_ms)
 
     # ---- container lifecycle ---------------------------------------------
     def start(self, func: str, slices: int, model_mb: float,
@@ -211,7 +341,9 @@ class DeviceModel:
                 break
         if hit is not None:
             pool.remove(hit)
-        if hit is not None and hit.tier == HOT:
+        if self.shared_weights:
+            tier, hbm = self._attach_shared(func, model_mb, hit)
+        elif hit is not None and hit.tier == HOT:
             tier, hbm = HOT, hit.hbm_mb      # weights stay where they are
             self.stats.hot_hits += 1
         else:
@@ -234,6 +366,43 @@ class DeviceModel:
                                      self.hbm_used_mb)
         self.check()
         return alloc, tier
+
+    def _attach_shared(self, func: str, model_mb: float,
+                       hit: Optional[WarmContainer]) -> tuple[str, float]:
+        """Shared-weights attach: the new container maps the function's
+        refcounted weight set instead of charging its own copy.  Returns
+        ``(tier, alloc_hbm_mb)`` — the allocation itself carries 0 bytes,
+        all residency lives on the :class:`WeightSet`."""
+        ws = self._ws(func)
+        if hit is not None:
+            ws.warm_refs -= 1
+        if ws.resident:
+            # bytes still mapped by a *peer* (not just the popped hit):
+            # the attach shares them instead of charging a copy
+            if ws.run_refs > 0 or ws.warm_refs > 0:
+                self.stats.shared_hits += 1
+            if hit is not None:
+                tier = HOT                   # container + weights both live
+                self.stats.hot_hits += 1
+            else:
+                tier = COLD                  # container must still cold-boot
+                self.stats.cold_misses += 1
+        else:
+            need = self._capped(model_mb)
+            self._ensure_hbm(need)
+            self._load_shared(func, model_mb)
+            if hit is not None:
+                # container survived, the shared set was demoted: one
+                # swap-in re-promotes every sibling at once
+                tier = WARM
+                self.stats.warm_hits += 1
+                self.stats.swap_ins += 1
+                self.stats.swap_in_ms += swap_in_ms(model_mb)
+            else:
+                tier = COLD
+                self.stats.cold_misses += 1
+        ws.run_refs += 1
+        return tier, 0.0
 
     def resize(self, aid: int, new_slices: int) -> bool:
         """Vertically resize a *running* allocation's compute quota
@@ -262,7 +431,16 @@ class DeviceModel:
         demotion."""
         a = self.allocs.pop(aid)
         self.used_slices -= a.slices
-        c = WarmContainer(a.func, expiry, a.hbm_mb, HOT)
+        if self.shared_weights:
+            ws = self._ws(a.func)
+            ws.run_refs -= 1
+            ws.warm_refs += 1
+            # the running allocation pinned the set (_ensure_hbm never
+            # demotes while run_refs > 0), so the weights are resident
+            # and the container always parks hot
+            c = WarmContainer(a.func, expiry, 0.0, HOT)
+        else:
+            c = WarmContainer(a.func, expiry, a.hbm_mb, HOT)
         pool = self.pools[a.func]
         bisect.insort(pool, c, key=lambda x: x.expiry)
         self.check()
@@ -275,14 +453,34 @@ class DeviceModel:
         pressure it is provisioned warm (weights staged in host RAM) —
         pre-warming never demotes somebody else's resident weights."""
         self._gc(now)
-        need = self._capped(model_mb)
-        if need <= self.free_hbm_mb:
-            self.hbm_used_mb += need
-            c = WarmContainer(func, expiry, need, HOT)
-            self.stats.hbm_peak_mb = max(self.stats.hbm_peak_mb,
-                                         self.hbm_used_mb)
+        if self.shared_weights:
+            ws = self._ws(func)
+            if ws.resident:
+                c = WarmContainer(func, expiry, 0.0, HOT)   # maps the peer's
+            elif self._capped(model_mb) <= self.free_hbm_mb:
+                # re-loading a previously-demoted set promotes every WARM
+                # sibling at once; that H2D copy is a real swap-in and is
+                # counted, but it happens off the critical path (a
+                # background prefetch), so no start ever pays its latency
+                if any(e.tier == WARM for e in self.pools[func]):
+                    self.stats.swap_ins += 1
+                    self.stats.swap_in_ms += swap_in_ms(model_mb)
+                self._load_shared(func, model_mb)
+                c = WarmContainer(func, expiry, 0.0, HOT)
+                self.stats.hbm_peak_mb = max(self.stats.hbm_peak_mb,
+                                             self.hbm_used_mb)
+            else:
+                c = WarmContainer(func, expiry, 0.0, WARM)
+            ws.warm_refs += 1
         else:
-            c = WarmContainer(func, expiry, 0.0, WARM)
+            need = self._capped(model_mb)
+            if need <= self.free_hbm_mb:
+                self.hbm_used_mb += need
+                c = WarmContainer(func, expiry, need, HOT)
+                self.stats.hbm_peak_mb = max(self.stats.hbm_peak_mb,
+                                             self.hbm_used_mb)
+            else:
+                c = WarmContainer(func, expiry, 0.0, WARM)
         bisect.insort(self.pools[func], c, key=lambda x: x.expiry)
         self.check()
         return c
@@ -294,9 +492,12 @@ class DeviceModel:
         return [c for c in self.pools[func] if c.expiry >= now]
 
     def retire(self, func: str, container: WarmContainer) -> None:
-        """Scale-down: drop one keep-alive container, freeing HBM."""
+        """Scale-down: drop one keep-alive container, freeing HBM (in
+        shared mode the weights stay until the last reference goes)."""
         self.pools[func].remove(container)
         self.hbm_used_mb -= container.hbm_mb
+        if self.shared_weights:
+            self._drop_warm_refs(func, 1)
         self.check()
 
     # ---- invariants -------------------------------------------------------
@@ -312,8 +513,38 @@ class DeviceModel:
                 f"/{self.total_slices}")
         if any(a.slices < MIN_SLICES for a in self.allocs.values()):
             raise OversubscribedError("allocation below MIN_SLICES")
-        resident = sum(a.hbm_mb for a in self.allocs.values()) + \
-            sum(c.hbm_mb for pool in self.pools.values() for c in pool)
+        if self.shared_weights:
+            resident = sum(ws.mb for ws in self.weights.values())
+            run_counts = Counter(a.func for a in self.allocs.values())
+            referenced = set(run_counts) | \
+                {f for f, p in self.pools.items() if p}
+            if referenced != set(self.weights):
+                raise OversubscribedError(
+                    f"weight-set drift: ledger {sorted(self.weights)} vs "
+                    f"referenced {sorted(referenced)}")
+            for func, ws in self.weights.items():
+                if ws.run_refs != run_counts.get(func, 0) or \
+                        ws.warm_refs != len(self.pools.get(func, ())):
+                    raise OversubscribedError(
+                        f"refcount drift for {func}: runs {ws.run_refs}/"
+                        f"{run_counts.get(func, 0)}, warms {ws.warm_refs}/"
+                        f"{len(self.pools.get(func, ()))}")
+                if ws.mb < 0 or (not ws.resident and ws.mb != 0):
+                    raise OversubscribedError(
+                        f"weight bytes drift for {func}: mb={ws.mb} "
+                        f"resident={ws.resident}")
+                if any((c.tier == HOT) != ws.resident
+                       for c in self.pools.get(func, ())):
+                    raise OversubscribedError(
+                        f"tier desync for {func}: shared weights resident="
+                        f"{ws.resident} but pool tiers disagree")
+            if any(c.hbm_mb for pool in self.pools.values() for c in pool) \
+                    or any(a.hbm_mb for a in self.allocs.values()):
+                raise OversubscribedError(
+                    "per-container HBM charged in shared-weights mode")
+        else:
+            resident = sum(a.hbm_mb for a in self.allocs.values()) + \
+                sum(c.hbm_mb for pool in self.pools.values() for c in pool)
         if not math.isclose(resident, self.hbm_used_mb,
                             rel_tol=1e-9, abs_tol=1e-6):
             raise OversubscribedError(

@@ -18,8 +18,20 @@ The three warm tiers the device model distinguishes:
   hot   weights resident in HBM          -> restart penalty 0
   warm  weights in host RAM              -> restart penalty swap_in_ms
   cold  nothing anywhere                 -> restart penalty profile.cold_ms
+
+``tier_penalty_ms`` maps a tier to that restart penalty and is the single
+source of truth shared by the device model (``swap_cost_ms`` queries), the
+emulator's dispatch accounting and the memory-aware placement ranking.
 """
 from __future__ import annotations
+
+from typing import Optional
+
+# Warm-state tiers (defined here, below the device model, so the cost
+# helpers need no import from ``device`` — re-exported there).
+HOT = "hot"      # weights resident in HBM
+WARM = "warm"    # weights in host RAM (swap-in penalty on start)
+COLD = "cold"    # no container anywhere (full cold start)
 
 # Host -> device effective bandwidth.  PCIe 4.0 x16 peaks at 32 GB/s; real
 # pinned-memory H2D copies sustain roughly half (Torpor reports ~1.5 s for
@@ -35,6 +47,23 @@ def swap_in_ms(model_mb: float) -> float:
     if model_mb <= 0.0:
         return 0.0
     return SWAP_FIXED_MS + model_mb / H2D_GBPS
+
+
+def tier_penalty_ms(tier: str, model_mb: float,
+                    cold_ms: Optional[float] = None) -> float:
+    """Restart penalty a container pays when its warm state is ``tier``.
+
+    ``cold_ms`` is the function's full cold-start time (container
+    provisioning + weight load); when the caller cannot supply it the
+    weight-load component alone is returned as an admissible lower
+    bound (that keeps planners that price this penalty optimistic,
+    never pessimistic).
+    """
+    if tier == HOT:
+        return 0.0
+    if tier == WARM:
+        return swap_in_ms(model_mb)
+    return cold_ms if cold_ms is not None else swap_in_ms(model_mb)
 
 
 # fp16 checkpoint sizes (MB) for the paper's Table-3 image functions —

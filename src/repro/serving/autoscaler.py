@@ -78,6 +78,21 @@ class AutoscalerPolicy:
         return sum(len(inv.device.warm_entries(func, sim.now))
                    for inv in sim.invokers)
 
+    @staticmethod
+    def spread_order(sim, func: str) -> list:
+        """Invokers ordered for pre-warm placement: emptiest first; under
+        a memory-aware scheduler, invokers where the function's weights
+        are already resident come first (a pre-warm there maps the shared
+        read-only weights instead of staging a new copy), with the legacy
+        emptiest-first order breaking ties — memory-blind runs see the
+        legacy order unchanged."""
+        order = sorted(sim.invokers, key=lambda i: -i.free_vgpu)
+        if getattr(sim.sched, "placement", None) == "memory":
+            cold_ms = sim.profiles[func].cold_ms
+            order.sort(key=lambda i: i.start_penalty_ms(func, cold_ms,
+                                                        sim.now))
+        return order
+
 
 @_register
 class NoPrewarm(AutoscalerPolicy):
@@ -211,7 +226,9 @@ class FineGrained(AutoscalerPolicy):
         have = self.warm_count(sim, func) + self._pending.get(func, 0)
         if have < target:
             # scale up: pre-warm the deficit on the emptiest invokers
-            order = sorted(sim.invokers, key=lambda i: -i.free_vgpu)
+            # (weight-resident invokers first under a memory-aware
+            # scheduler — see ``spread_order``)
+            order = self.spread_order(sim, func)
             for j in range(target - have):
                 inv = order[j % len(order)]
                 sim.push_event(sim.now, "autoscale", (func, inv.idx))

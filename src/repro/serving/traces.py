@@ -245,16 +245,39 @@ class TraceReplayScenario(Scenario):
 
     @staticmethod
     def read_csv(path: str) -> list[tuple[float, str]]:
-        """Parse a ``t_ms,app`` CSV (header required, extra cols ignored)."""
+        """Parse a ``t_ms,app`` CSV (header required, extra cols ignored).
+
+        Blank and whitespace-only rows — the trailing newline junk real
+        trace exports ship with — are skipped; a row missing either
+        value, or with an unparsable ``t_ms``, raises a ``ValueError``
+        naming the file and line instead of a bare ``KeyError``."""
         import csv as _csv
+        rows: list[tuple[float, str]] = []
         with open(path, newline="") as f:
             reader = _csv.DictReader(f)
             if reader.fieldnames is None or \
                     not {"t_ms", "app"} <= set(reader.fieldnames):
                 raise ValueError(
-                    f"{path}: trace CSV needs a 't_ms,app' header, "
-                    f"got {reader.fieldnames}")
-            return [(float(r["t_ms"]), r["app"].strip()) for r in reader]
+                    f"{path}: trace CSV needs a 't_ms,app' header "
+                    f"(extra columns are ignored), got {reader.fieldnames}")
+            for r in reader:
+                cells = [v for v in r.values() if v is not None]
+                if all(not str(v).strip() for v in cells):
+                    continue                       # blank/trailing line
+                t_raw, app = r.get("t_ms"), r.get("app")
+                if t_raw is None or not t_raw.strip() or \
+                        app is None or not app.strip():
+                    raise ValueError(
+                        f"{path} line {reader.line_num}: row needs both "
+                        f"'t_ms' and 'app' values, got {dict(r)!r}")
+                try:
+                    t = float(t_raw)
+                except ValueError:
+                    raise ValueError(
+                        f"{path} line {reader.line_num}: t_ms must be a "
+                        f"number, got {t_raw!r}") from None
+                rows.append((t, app.strip()))
+        return rows
 
     def arrivals(self, app_names: Sequence[str], n: int,
                  seed: int = 0) -> list[Arrival]:
