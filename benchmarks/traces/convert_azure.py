@@ -1,0 +1,148 @@
+"""Convert public Azure Functions invocation-count traces to ``(t_ms, app)``.
+
+The Azure Functions 2019 dataset (and the 2021 refresh of the same
+schema) ships per-function *minute-bucketed invocation counts*::
+
+    HashOwner,HashApp,HashFunction,Trigger,1,2,...,1440
+
+one row per function, one numbered column per minute of the day.  Our
+scenario engine replays point-process traces (``t_ms,app`` rows —
+``repro.serving.traces.TraceReplayScenario``), so this converter
+
+  * selects the top ``--apps`` functions by total invocations (ties
+    broken by id so the choice is deterministic),
+  * truncates to the first ``--minutes`` minute columns,
+  * scales each bucket's count by ``--scale`` (fractional expectations
+    are realised with a seeded draw, so 0.1 of a 7-count bucket is not
+    silently dropped),
+  * spreads every bucket's arrivals uniformly inside its minute with
+    seeded intra-minute jitter (the dataset quantises away sub-minute
+    timing; uniform jitter is the max-entropy reconstruction),
+
+and writes the merged, time-sorted ``t_ms,app`` CSV.  Function hash ids
+are kept verbatim — ``TraceReplayScenario`` deterministically remaps
+unknown app names onto whatever app set a run serves, so no information
+is destroyed here.  Same seed + same flags => identical output file.
+
+    python benchmarks/traces/convert_azure.py \
+        invocations_per_function_md.anon.d01.csv \
+        --apps 6 --minutes 60 --scale 0.01 --out azure_d01_1h.csv
+"""
+from __future__ import annotations
+
+import argparse
+import csv
+import pathlib
+from typing import Optional, Sequence
+
+import numpy as np
+
+MS_PER_MINUTE = 60_000.0
+# id-column preference: function-level first, then coarser groupings
+ID_COLUMNS = ("HashFunction", "HashApp", "HashOwner")
+
+
+def load_counts(path: str) -> dict[str, list[int]]:
+    """Parse an Azure minute-count CSV into ``id -> per-minute counts``.
+
+    Minute columns are the integer-named ones, taken in numeric order;
+    the row id is the finest hash column present (see ``ID_COLUMNS``).
+    Rows sharing an id (a function appearing under several triggers)
+    are summed.  Raises ``ValueError`` naming the file when the schema
+    has no id or no minute columns."""
+    with open(path, newline="") as f:
+        reader = csv.DictReader(f)
+        fields = reader.fieldnames or []
+        id_col = next((c for c in ID_COLUMNS if c in fields), None)
+        minute_cols = sorted((c for c in fields if c.strip().isdigit()),
+                             key=lambda c: int(c))
+        if id_col is None or not minute_cols:
+            raise ValueError(
+                f"{path}: expected an Azure invocation-count CSV with one "
+                f"of {ID_COLUMNS} plus numbered minute columns, "
+                f"got {fields}")
+        out: dict[str, list[int]] = {}
+        for row in reader:
+            rid = (row.get(id_col) or "").strip()
+            if not rid:
+                continue
+            counts = out.setdefault(rid, [0] * len(minute_cols))
+            for i, c in enumerate(minute_cols):
+                cell = (row.get(c) or "").strip()
+                counts[i] += int(float(cell)) if cell else 0
+    return out
+
+
+def convert(counts: dict[str, Sequence[int]],
+            apps: Optional[int] = None,
+            minutes: Optional[int] = None,
+            scale: float = 1.0,
+            seed: int = 0) -> list[tuple[float, str]]:
+    """Minute-bucketed counts -> time-sorted ``(t_ms, app)`` rows.
+
+    ``apps`` keeps the busiest N functions (all when None), ``minutes``
+    truncates the horizon, ``scale`` multiplies every bucket's count
+    (the fractional remainder is realised with one seeded draw per
+    bucket).  Jitter is uniform inside each minute — seeded, so the
+    same call yields the same trace."""
+    if not scale > 0.0:            # also rejects NaN
+        raise ValueError(f"convert_azure: scale must be > 0, got {scale!r}")
+    rng = np.random.default_rng(seed)
+    keep = sorted(counts, key=lambda k: (-sum(counts[k]), k))
+    if apps is not None:
+        keep = keep[:apps]
+    rows: list[tuple[float, str]] = []
+    for rid in keep:               # deterministic id order drives the rng
+        buckets = counts[rid]
+        if minutes is not None:
+            buckets = buckets[:minutes]
+        for m, c in enumerate(buckets):
+            want = c * scale
+            n = int(want) + int(rng.random() < (want - int(want)))
+            if n <= 0:
+                continue
+            jitter = np.sort(rng.random(n))
+            rows.extend(((m + float(u)) * MS_PER_MINUTE, rid)
+                        for u in jitter)
+    rows.sort(key=lambda r: (r[0], r[1]))
+    return rows
+
+
+def write_trace(rows: list[tuple[float, str]], out_path: str) -> None:
+    with open(out_path, "w", newline="") as f:
+        w = csv.writer(f)
+        w.writerow(["t_ms", "app"])
+        w.writerows([f"{t:.3f}", app] for t, app in rows)
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("input", help="Azure invocation-count CSV "
+                                  "(invocations_per_function_md.anon.*)")
+    ap.add_argument("--apps", type=int, default=None,
+                    help="keep only the N busiest functions")
+    ap.add_argument("--minutes", type=int, default=None,
+                    help="truncate to the first N minutes")
+    ap.add_argument("--scale", type=float, default=1.0,
+                    help="multiply every bucket's count (0.01 thins a "
+                         "production day to benchmark size)")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="jitter/thinning seed (same seed => same trace)")
+    ap.add_argument("--out", default=None,
+                    help="output CSV (default: <input stem>_trace.csv "
+                         "next to the input)")
+    args = ap.parse_args(argv)
+
+    rows = convert(load_counts(args.input), apps=args.apps,
+                   minutes=args.minutes, scale=args.scale, seed=args.seed)
+    src = pathlib.Path(args.input)
+    out = args.out or str(src.with_name(src.stem + "_trace.csv"))
+    write_trace(rows, out)
+    span_min = rows[-1][0] / MS_PER_MINUTE if rows else 0.0
+    print(f"[convert-azure] {len(rows)} arrivals over {span_min:.1f} min, "
+          f"{len({a for _, a in rows})} functions -> {out}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -93,10 +93,13 @@ class Task:
     tier: str = COLD             # warm-state tier paid at start (hot/warm/cold)
     alloc_id: int = -1           # DeviceModel allocation id while running
     quota_slices: int = 0        # current compute quota (slices)
-    exec_start_ms: float = 0.0   # start + cold/swap penalty
+    exec_start_ms: float = 0.0   # start + residual restart penalty
     dispatch_ms: float = 0.0     # sim time the allocation was taken
     gen: int = 0                 # resize generation (stale-event guard)
     q_since: float = 0.0         # quota unchanged since (slice-ms account)
+    # --- overlapped-swap accounting ---
+    penalty_ms: float = 0.0      # restart penalty actually charged
+    full_penalty_ms: float = 0.0  # what the additive model would charge
 
     @property
     def quota_vgpu(self) -> float:
@@ -115,14 +118,16 @@ class Invoker:
     def __init__(self, idx: int, vcpus: int, vgpus: int,
                  hbm_per_vgpu_mb: Optional[float] = None,
                  footprints: Optional[dict[str, float]] = None,
-                 shared_weights: bool = False):
+                 shared_weights: bool = False,
+                 overlap: bool = False):
         self.idx = idx
         self.vcpus = vcpus
         self.vgpus = vgpus
         self.free_vcpu = vcpus
         self.footprints = footprints or {}
         self.device = DeviceModel(vgpus, hbm_per_vgpu_mb=hbm_per_vgpu_mb,
-                                  shared_weights=shared_weights)
+                                  shared_weights=shared_weights,
+                                  overlap=overlap)
 
     @property
     def free_vgpu(self) -> float:
@@ -154,9 +159,16 @@ class Invoker:
     def start_penalty_ms(self, func: str, cold_ms: Optional[float],
                          now: float) -> float:
         """Predicted restart penalty of starting ``func`` on this invoker
-        at ``now`` — the memory-aware placement/planning ranking term."""
+        at ``now`` — the memory-aware placement/planning ranking term.
+        Under the overlapped swap pipeline this is the *residual*
+        transfer time (an in-flight prefetch shrinks it toward zero)."""
         return self.device.swap_cost_ms(func, self.model_mb(func), now,
                                         cold_ms)
+
+    def prefetch(self, func: str, now: float) -> bool:
+        """Enqueue a background PCIe copy re-promoting ``func``'s
+        demoted weights (overlap mode; see ``DeviceModel.prefetch``)."""
+        return self.device.prefetch(func, self.model_mb(func), now)
 
 
 # ---------------------------------------------------------------------------
@@ -208,18 +220,30 @@ class ClusterSim:
                  autoscaler: Any = None,
                  admission: Optional[Callable] = None,
                  hbm_per_vgpu_mb: Optional[float] = None,
-                 shared_weights: bool = False):
+                 shared_weights: bool = False,
+                 overlap: bool = False,
+                 prefetch: bool = False):
         self.apps = apps
         self.tables = tables
         self.profiles = profiles
         self.sched = scheduler
         self.shared_weights = shared_weights
+        # overlapped swap pipeline: restart penalties become completion
+        # times on a per-device PCIe transfer engine; ``prefetch`` adds
+        # the predicted-next-stage background copies.  Both default off:
+        # legacy configurations replay bit-identically.
+        if prefetch and not overlap:
+            raise ValueError("prefetch=True requires overlap=True "
+                             "(prefetch is a transfer-engine lever)")
+        self.overlap = overlap
+        self.prefetch_weights = prefetch
         footprints = {n: getattr(p, "model_mb", 0.0)
                       for n, p in profiles.items()}
         self.invokers = [Invoker(i, vcpus, vgpus,
                                  hbm_per_vgpu_mb=hbm_per_vgpu_mb,
                                  footprints=footprints,
-                                 shared_weights=shared_weights)
+                                 shared_weights=shared_weights,
+                                 overlap=overlap)
                          for i in range(n_invokers)]
         self.noise_sigma = noise_sigma
         self.rng = np.random.default_rng(seed)
@@ -257,6 +281,10 @@ class ClusterSim:
         self.running: dict[int, Task] = {}   # tid -> in-flight task
         self.resizes: list[tuple] = []       # (t, invoker, tid, old, new)
         self.slice_busy_ms = 0.0             # integral of quota over time
+        # overlapped-swap accounting: penalty actually charged to task
+        # starts vs what the additive model would have charged
+        self.penalty_charged_ms = 0.0
+        self.penalty_full_ms = 0.0
 
     # ---- events ----------------------------------------------------------
     def push_event(self, t: float, kind: str, payload: Any):
@@ -500,16 +528,27 @@ class ClusterSim:
                         REMOTE_TRANSFER_MS_PER_MB * self.profiles[func].input_mb)
 
         slices = cfg.vgpu * SLICES_PER_VGPU
-        # the predicted restart penalty IS the billed one — hot: free;
-        # warm: the Torpor-style swap-in transfer (weights were demoted
-        # to host RAM), not a full cold start; cold: full cold start,
-        # discounted by the weight-load component when shared weights
-        # are already resident via a running peer (see
-        # ``DeviceModel.swap_cost_ms``)
-        penalty_ms = inv.start_penalty_ms(func, self.profiles[func].cold_ms,
-                                          self.now)
-        alloc, tier = inv.device.start(func, slices, inv.model_mb(func),
-                                       self.now)
+        if self.overlap:
+            # overlapped swap pipeline: the restart penalty is a
+            # transfer-engine *completion time* (``alloc.ready_ms``),
+            # not a scalar — execution gates on the weights landing,
+            # so the swap-in hides behind data transfer, scheduling
+            # overhead and any prefetch issued at the predecessor's
+            # dispatch; only the residual is charged below
+            alloc, tier = inv.device.start(
+                func, slices, inv.model_mb(func), self.now,
+                cold_ms=self.profiles[func].cold_ms)
+        else:
+            # the predicted restart penalty IS the billed one — hot: free;
+            # warm: the Torpor-style swap-in transfer (weights were demoted
+            # to host RAM), not a full cold start; cold: full cold start,
+            # discounted by the weight-load component when shared weights
+            # are already resident via a running peer (see
+            # ``DeviceModel.swap_cost_ms``)
+            penalty_ms = inv.start_penalty_ms(
+                func, self.profiles[func].cold_ms, self.now)
+            alloc, tier = inv.device.start(func, slices, inv.model_mb(func),
+                                           self.now)
         cold = tier == COLD
         if cold:
             self.cold_starts += 1
@@ -518,23 +557,38 @@ class ClusterSim:
             1.0 + self.rng.normal(0.0, self.noise_sigma), 0.5, 2.0))
         exec_ms = self.profiles[func].exec_ms(cfg) * noise
         start = self.now + overhead_ms + transfer
-        end = start + penalty_ms + exec_ms
+        if self.overlap:
+            exec_start = max(start, alloc.ready_ms)
+            charged = exec_start - start
+            full = alloc.full_penalty_ms
+        else:
+            exec_start = start + penalty_ms
+            charged = full = penalty_ms
+        end = exec_start + exec_ms
 
         inv.free_vcpu -= cfg.vcpu
         rate = cfg.vcpu * VCPU_PRICE_PER_H + cfg.vgpu * VGPU_PRICE_PER_H
-        cost = rate * (penalty_ms + exec_ms) / 3.6e6
+        cost = rate * (charged + exec_ms) / 3.6e6
         self.total_cost += cost
+        self.penalty_charged_ms += charged
+        self.penalty_full_ms += full
         task = Task(jobs, stage, func, cfg, inv_idx, start, end, cold, cost,
                     tid=len(self.tasks), tier=tier, alloc_id=alloc.aid,
-                    quota_slices=slices, exec_start_ms=start + penalty_ms,
-                    dispatch_ms=self.now, q_since=self.now)
+                    quota_slices=slices, exec_start_ms=exec_start,
+                    dispatch_ms=self.now, q_since=self.now,
+                    penalty_ms=charged, full_penalty_ms=full)
         self.tasks.append(task)
         self.running[task.tid] = task
         self.push_event(end, "complete", (task, task.gen))
         # warm-pool policy hook: reactive scale-up / pre-warm scheduling /
         # scale-down all live in repro.serving.autoscaler
         self.autoscaler.on_dispatch(self, func, inv_idx, cold,
-                                    penalty_ms + exec_ms)
+                                    charged + exec_ms)
+        if self.prefetch_weights:
+            # predictive prefetch (Torpor): stage the successor stages'
+            # weights on this invoker — locality placement probes it
+            # first — so the copy overlaps this task's execution
+            self.autoscaler.prefetch(self, app, stage, inv_idx)
 
     # ---- vertical reallocation ---------------------------------------------
     def resize_task(self, task: Task, new_slices: int) -> bool:
@@ -622,4 +676,15 @@ class ClusterSim:
             "hbm_peak_mb": max((d.stats.hbm_peak_mb for d in devs),
                                default=0.0),
             "shared_hits": sum(d.stats.shared_hits for d in devs),
+            # overlapped-swap pipeline observability
+            "transfer_busy_ms": sum(d.engine.busy_ms for d in devs),
+            "transfer_demand_ms": sum(d.engine.demand_ms for d in devs),
+            "transfer_prefetch_ms": sum(d.engine.prefetch_ms for d in devs),
+            "prefetch_issued": sum(d.stats.prefetch_issued for d in devs),
+            "prefetch_hits": sum(d.stats.prefetch_hits for d in devs),
+            "prefetch_wasted": sum(d.stats.prefetch_wasted for d in devs),
+            "penalty_charged_ms": self.penalty_charged_ms,
+            "penalty_full_ms": self.penalty_full_ms,
+            "penalty_hidden_ms": self.penalty_full_ms
+            - self.penalty_charged_ms,
         }

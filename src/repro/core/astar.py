@@ -29,6 +29,11 @@ the search (``ProfileTable.with_penalty``): the time blade then prunes
 against the *true* latency including the swap, and the cost blade bills
 the penalty window at each config's $-rate.  A zero penalty leaves the
 stage's table untouched, so memory-blind callers are bit-identical.
+Under the overlapped swap pipeline the caller passes the *residual*
+penalty left after the transfer engine hides the copy behind the
+predecessor stage's execution (see ``ESGScheduler.plan``) — deeper
+pipeline suffixes therefore price smaller penalties, which is exactly
+the pipeline-conscious behaviour the paper's G_SLO distribution wants.
 """
 from __future__ import annotations
 

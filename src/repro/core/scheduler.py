@@ -91,14 +91,33 @@ class ESGScheduler(SchedulerPolicy):
         state anywhere is host-staged weights, and 0 when the function is
         cold everywhere (container provisioning is not a swap cost and
         stays unpriced, as in the legacy planner — this also keeps
-        unbounded-HBM runs, which never demote, bit-identical)."""
+        unbounded-HBM runs, which never demote, bit-identical).
+
+        Under the overlapped swap pipeline a "hot" invoker may still be
+        waiting on an in-flight background copy, so the prediction is
+        the best *residual* transfer time across hot invokers instead
+        of a flat zero."""
         warm_somewhere = False
+        best_residual = None
         for inv in sim.invokers:
             r = inv.residency(func, sim.now)
             if r == HOT:
-                return 0.0
-            if r == WARM:
+                if not getattr(sim, "overlap", False):
+                    return 0.0
+                residual = inv.start_penalty_ms(func, None, sim.now)
+                if residual <= 0.0:
+                    return 0.0
+                best_residual = (residual if best_residual is None
+                                 else min(best_residual, residual))
+            elif r == WARM:
                 warm_somewhere = True
+        if best_residual is not None:
+            if warm_somewhere:
+                # a host-staged copy elsewhere caps the price: placement
+                # can always fall back to a fresh demand swap there
+                return min(best_residual,
+                           swap_in_ms(sim.invokers[0].model_mb(func)))
+            return best_residual
         if warm_somewhere:
             return swap_in_ms(sim.invokers[0].model_mb(func))
         return 0.0
@@ -139,6 +158,16 @@ class ESGScheduler(SchedulerPolicy):
         penalties = None
         if self.placement == "memory" and getattr(sim, "invokers", None):
             penalties = [self._predicted_swap_ms(sim, f) for f in funcs]
+            if getattr(sim, "overlap", False) and \
+                    getattr(sim, "prefetch_weights", False):
+                # overlapped swap pipeline with predictive prefetch:
+                # stage j's swap-in is enqueued when stage j-1
+                # dispatches, so at least stage j-1's fastest execution
+                # hides it — price only the residual, which shrinks
+                # with pipeline depth (stage 0 pays what is left *now*)
+                for j in range(1, len(penalties)):
+                    penalties[j] = max(
+                        penalties[j] - tables[j - 1].min_time, 0.0)
             if not any(penalties):
                 penalties = None
         results = esg_1q(tables, g_slo, k=self.k, penalties_ms=penalties)

@@ -4,16 +4,21 @@ model-state swap tiers).
   * ``device``     — :class:`DeviceModel`: per-invoker slice lattice,
                      resizable running allocations, two-tier warm pools;
   * ``footprints`` — model-weight footprints + the Torpor-style
-                     host->HBM swap-in timing model.
+                     host->HBM swap-in timing model;
+  * ``transfer``   — :class:`TransferEngine`: per-device asynchronous
+                     PCIe copy timeline (overlapped swap + prefetch).
 """
 from repro.gpu.device import (COLD, HOT, MIN_SLICES, SLICES_PER_VGPU, WARM,
                               Allocation, DeviceModel, DeviceStats,
                               OversubscribedError, WarmContainer, WeightSet)
-from repro.gpu.footprints import PAPER_MODEL_MB, swap_in_ms, tier_penalty_ms
+from repro.gpu.footprints import (PAPER_MODEL_MB, cold_components,
+                                  swap_in_ms, tier_penalty_ms)
+from repro.gpu.transfer import DEMAND, PREFETCH, Transfer, TransferEngine
 
 __all__ = [
-    "Allocation", "COLD", "DeviceModel", "DeviceStats", "HOT",
-    "MIN_SLICES", "OversubscribedError", "PAPER_MODEL_MB",
-    "SLICES_PER_VGPU", "WARM", "WarmContainer", "WeightSet",
-    "swap_in_ms", "tier_penalty_ms",
+    "Allocation", "COLD", "DEMAND", "DeviceModel", "DeviceStats", "HOT",
+    "MIN_SLICES", "OversubscribedError", "PAPER_MODEL_MB", "PREFETCH",
+    "SLICES_PER_VGPU", "Transfer", "TransferEngine", "WARM",
+    "WarmContainer", "WeightSet", "cold_components", "swap_in_ms",
+    "tier_penalty_ms",
 ]

@@ -34,6 +34,15 @@ sibling container flips tier together, because they share the bytes.
 The default ``shared_weights=False`` keeps the PR-2 per-container-copy
 accounting bit-for-bit.
 
+``overlap=True`` replaces the additive restart-penalty scalars with an
+asynchronous per-device PCIe :class:`~repro.gpu.transfer.TransferEngine`
+timeline: ``start`` routes swap-ins and cold weight loads through the
+engine and returns a *completion time* (``Allocation.ready_ms``) instead
+of a synchronous charge, ``prefetch`` re-promotes demoted weights as
+background copies that overlap the predecessor stage's execution, and
+``swap_cost_ms`` becomes a query of the *residual* transfer time.  The
+default ``overlap=False`` keeps the PR-3 additive accounting bit-exact.
+
 Every mutation re-verifies the oversubscription invariants (slices,
 HBM, refcounts, per-allocation floors) and raises
 :class:`OversubscribedError` on violation — the property tests drive
@@ -49,8 +58,9 @@ import math
 from collections import Counter, defaultdict
 from typing import Optional
 
-from repro.gpu.footprints import (COLD, HOT, WARM, swap_in_ms,
-                                  tier_penalty_ms)
+from repro.gpu.footprints import (COLD, HOT, WARM, cold_components,
+                                  swap_in_ms, tier_penalty_ms)
+from repro.gpu.transfer import Transfer, TransferEngine
 
 # Quota lattice resolution: 1/4 vGPU.  The scheduler's integer-vGPU
 # configuration lattice maps onto it as ``cfg.vgpu * SLICES_PER_VGPU``;
@@ -71,6 +81,9 @@ class Allocation:
     slices: int              # current compute quota
     initial_slices: int      # quota granted at dispatch (resize anchor)
     hbm_mb: float            # weights pinned while running
+    # --- overlap mode (transfer-engine timeline) ---
+    ready_ms: float = 0.0            # when the weights land (exec gate)
+    full_penalty_ms: float = 0.0     # what the additive model would charge
 
 
 @dataclasses.dataclass
@@ -80,6 +93,11 @@ class WarmContainer:
     expiry: float
     hbm_mb: float            # resident bytes (0 once demoted, or shared)
     tier: str                # HOT | WARM
+    # overlap mode: in-flight background copy backing this container's
+    # HOT tier (non-shared ledger only; shared residency lives on the
+    # WeightSet), and whether it counts toward predictive-prefetch stats
+    transfer: Optional[Transfer] = None
+    prefetched: bool = False
 
 
 @dataclasses.dataclass
@@ -96,6 +114,10 @@ class WeightSet:
     resident: bool = False
     run_refs: int = 0        # running allocations pinning the set
     warm_refs: int = 0       # idle keep-alive containers referencing it
+    # overlap mode: the copy currently backing residency (None once it
+    # landed long ago) and the predictive-prefetch accounting flag
+    transfer: Optional[Transfer] = None
+    prefetched: bool = False
 
 
 @dataclasses.dataclass
@@ -110,13 +132,18 @@ class DeviceStats:
     resizes_down: int = 0
     hbm_peak_mb: float = 0.0
     shared_hits: int = 0     # starts that mapped weights a peer had pinned
+    # overlap mode: predictive-prefetch outcome accounting
+    prefetch_issued: int = 0
+    prefetch_hits: int = 0   # a start consumed prefetched weights
+    prefetch_wasted: int = 0  # prefetched weights demoted/expired unused
 
 
 class DeviceModel:
     def __init__(self, vgpus: int,
                  hbm_per_vgpu_mb: Optional[float] = None,
                  slices_per_vgpu: int = SLICES_PER_VGPU,
-                 shared_weights: bool = False):
+                 shared_weights: bool = False,
+                 overlap: bool = False):
         self.vgpus = vgpus
         self.slices_per_vgpu = slices_per_vgpu
         self.total_slices = vgpus * slices_per_vgpu
@@ -125,6 +152,8 @@ class DeviceModel:
                              else vgpus * hbm_per_vgpu_mb)
         self.hbm_used_mb = 0.0
         self.shared_weights = shared_weights
+        self.overlap = overlap
+        self.engine = TransferEngine()
         self.weights: dict[str, WeightSet] = {}
         self._gc_now = -math.inf
         self.pools: dict[str, list[WarmContainer]] = defaultdict(list)
@@ -162,12 +191,35 @@ class DeviceModel:
                 if c.expiry < now:
                     self.hbm_used_mb -= c.hbm_mb
                     dropped += 1
+                    self._abandon_transfer(c)
                 else:
                     live.append(c)
             if dropped:
                 self.pools[func][:] = live
                 if self.shared_weights:
                     self._drop_warm_refs(func, dropped)
+
+    # ---- transfer-engine bookkeeping (overlap mode) -----------------------
+    def _abandon_transfer(self, owner) -> None:
+        """The ``WeightSet``/``WarmContainer`` backing a copy went away
+        (demotion, expiry, retire): cancel the remaining bytes and score
+        a predictive prefetch that never served a start as wasted."""
+        if owner.transfer is not None:
+            self.engine.cancel(owner.transfer)
+            owner.transfer = None
+        if owner.prefetched:
+            self.stats.prefetch_wasted += 1
+            owner.prefetched = False
+
+    def _in_flight(self, tr: Optional[Transfer], now: float) -> bool:
+        return tr is not None and (tr in self.engine.queue
+                                   or tr.done_ms > now)
+
+    def _residual(self, tr: Optional[Transfer], now: float) -> float:
+        """Time until a copy's weights are usable (0 for none/landed)."""
+        if tr is None:
+            return 0.0
+        return self.engine.residual_ms(tr, now)
 
     # ---- shared-weights ledger helpers ------------------------------------
     def _ws(self, func: str) -> WeightSet:
@@ -185,6 +237,7 @@ class DeviceModel:
         ws.warm_refs -= k
         if ws.run_refs <= 0 and ws.warm_refs <= 0:
             self.hbm_used_mb -= ws.mb
+            self._abandon_transfer(ws)
             del self.weights[func]
 
     def _resident(self, func: str) -> bool:
@@ -233,6 +286,7 @@ class DeviceModel:
                 self.hbm_used_mb -= ws.mb
                 ws.mb = 0.0
                 ws.resident = False
+                self._abandon_transfer(ws)
                 for c in self.pools[ws.func]:
                     c.tier = WARM
                 self.stats.demotions += 1
@@ -247,6 +301,7 @@ class DeviceModel:
             self.hbm_used_mb -= victim.hbm_mb
             victim.hbm_mb = 0.0
             victim.tier = WARM
+            self._abandon_transfer(victim)
             self.stats.demotions += 1
 
     def _hot(self, func: str):
@@ -312,8 +367,31 @@ class DeviceModel:
         cold penalty is discounted by the weight-load component.  This
         is also what the emulator bills, and it is what makes
         memory-aware placement prefer weight-dense invokers even when
-        every keep-alive container of the function is busy."""
+        every keep-alive container of the function is busy.
+
+        Overlap mode turns this into a query of *residual* transfer
+        time: a HOT tier backed by an in-flight copy costs the time
+        until the bytes land, and a cold boot costs only the slower of
+        container provisioning and the weight copy — the two overlap on
+        the transfer-engine timeline instead of adding up."""
         tier = self.residency(func, now)
+        if self.overlap:
+            if tier == HOT:
+                if self.shared_weights:
+                    ws = self.weights.get(func)
+                    return self._residual(ws.transfer if ws else None, now)
+                res = [self._residual(c.transfer, now)
+                       for c in self._hot(func)]
+                return min(res) if res else 0.0
+            if tier == WARM:
+                return swap_in_ms(model_mb)   # demand copy from host RAM
+            prov, w = cold_components(model_mb, cold_ms)
+            if self.shared_weights and self._resident(func):
+                # peer-resident weights: the boot waits only for
+                # provisioning — or for the peer's copy still in flight
+                ws = self.weights[func]
+                return max(prov, self._residual(ws.transfer, now))
+            return max(prov, w)
         if tier == COLD and self.shared_weights and self._resident(func):
             if cold_ms is None:
                 return 0.0
@@ -322,12 +400,22 @@ class DeviceModel:
 
     # ---- container lifecycle ---------------------------------------------
     def start(self, func: str, slices: int, model_mb: float,
-              now: float) -> tuple[Allocation, str]:
+              now: float,
+              cold_ms: Optional[float] = None) -> tuple[Allocation, str]:
         """Start a container: pop the best warm-pool entry (hot before
         warm, earliest expiry first) and pin weights + quota.  Returns
         ``(allocation, tier)`` where tier tells the caller which restart
         penalty to charge (hot: 0, warm: ``swap_in_ms``, cold: full
-        cold start)."""
+        cold start).
+
+        In overlap mode the penalty is a *timeline* instead of a scalar:
+        swap-ins and cold weight loads are enqueued on the PCIe transfer
+        engine and ``alloc.ready_ms`` carries the completion time the
+        caller gates execution on (``exec_start = max(start, ready)``);
+        ``alloc.full_penalty_ms`` records what the additive model would
+        have charged, so the hidden portion is auditable.  ``cold_ms``
+        (the function's full cold-start figure) is only consulted on the
+        overlap path — the legacy path charges it at the emulator."""
         self._gc(now)
         if slices > self.free_slices:
             raise OversubscribedError(
@@ -337,15 +425,32 @@ class DeviceModel:
         for want_tier in (HOT, WARM):
             tiered = [c for c in pool if c.tier == want_tier]
             if tiered:
-                hit = min(tiered, key=lambda c: c.expiry)
+                if want_tier == HOT and self.overlap \
+                        and not self.shared_weights:
+                    # prefer a copy whose weights have landed over one
+                    # still in flight (legacy expiry order breaks ties);
+                    # settle the lazy queue first so a prefetch that
+                    # already arrived is not misread as in flight
+                    self.engine._advance(now)
+                    hit = min(tiered, key=lambda c: (
+                        self._in_flight(c.transfer, now), c.expiry))
+                else:
+                    hit = min(tiered, key=lambda c: c.expiry)
                 break
         if hit is not None:
             pool.remove(hit)
+        ready, full = now, 0.0
         if self.shared_weights:
+            was_resident = self._resident(func)
             tier, hbm = self._attach_shared(func, model_mb, hit)
+            if self.overlap:
+                ready, full = self._shared_timeline(
+                    func, model_mb, tier, was_resident, cold_ms, now)
         elif hit is not None and hit.tier == HOT:
             tier, hbm = HOT, hit.hbm_mb      # weights stay where they are
             self.stats.hot_hits += 1
+            if self.overlap:
+                ready, full = self._consume_hot(hit, now)
         else:
             need = self._capped(model_mb)
             self._ensure_hbm(need)
@@ -356,16 +461,82 @@ class DeviceModel:
                 self.stats.warm_hits += 1
                 self.stats.swap_ins += 1
                 self.stats.swap_in_ms += swap_in_ms(model_mb)
+                if self.overlap:
+                    full = swap_in_ms(model_mb)
+                    ready = self.engine.demand(func, full, now).done_ms
             else:
                 tier = COLD
                 self.stats.cold_misses += 1
+                if self.overlap:
+                    # container provisioning (CPU-side) overlaps the
+                    # weight copy on the PCIe engine
+                    prov, w = cold_components(model_mb, cold_ms)
+                    wdone = (self.engine.demand(func, w, now).done_ms
+                             if w > 0.0 else now)
+                    ready, full = max(now + prov, wdone), prov + w
         self.used_slices += slices
-        alloc = Allocation(next(self._aid), func, slices, slices, hbm)
+        alloc = Allocation(next(self._aid), func, slices, slices, hbm,
+                           ready_ms=ready, full_penalty_ms=full)
         self.allocs[alloc.aid] = alloc
         self.stats.hbm_peak_mb = max(self.stats.hbm_peak_mb,
                                      self.hbm_used_mb)
         self.check()
         return alloc, tier
+
+    # ---- overlap-mode start timelines -------------------------------------
+    def _ready_of(self, owner, now: float,
+                  count_hit: bool = True) -> tuple[float, float]:
+        """(ready_ms, full_penalty_ms) of consuming ``owner``'s HOT
+        weights.  An in-flight prefetch is *promoted* — only the
+        remaining bytes finish at demand priority.  ``full`` rolls the
+        warm state back to what the additive model (which has no
+        background copies) would have seen: the copy's full duration
+        while it is unconsumed/in flight, zero once it has genuinely
+        served a start."""
+        tr = owner.transfer
+        ready, full = now, 0.0
+        if tr is not None:
+            if tr in self.engine.queue:
+                self.engine.promote(tr, now)
+            ready = max(tr.done_ms, now)
+            if owner.prefetched or tr.done_ms > now:
+                full = tr.total_ms
+        if owner.prefetched:
+            if count_hit:
+                self.stats.prefetch_hits += 1
+            owner.prefetched = False
+        return ready, full
+
+    def _consume_hot(self, hit: WarmContainer, now: float) -> tuple[float, float]:
+        return self._ready_of(hit, now)
+
+    def _shared_timeline(self, func: str, model_mb: float, tier: str,
+                         was_resident: bool, cold_ms: Optional[float],
+                         now: float) -> tuple[float, float]:
+        """Overlap timeline of a shared-weights attach (runs after
+        ``_attach_shared`` settled tier and HBM accounting)."""
+        ws = self._ws(func)
+        w_full = swap_in_ms(model_mb)
+        if tier == HOT:
+            return self._ready_of(ws, now)
+        if tier == WARM:
+            # demoted set re-loaded on the critical path: demand copy;
+            # every sibling shares the completion time
+            ws.prefetched = False
+            ws.transfer = self.engine.demand(func, w_full, now)
+            return ws.transfer.done_ms, w_full
+        prov, w = cold_components(model_mb, cold_ms)
+        if was_resident:
+            # peer-resident weights (PR-3 discount): the cold boot waits
+            # only for provisioning — or for the peer's copy in flight
+            wready, wfull = self._ready_of(ws, now)
+            return max(now + prov, wready), prov + wfull
+        ws.prefetched = False
+        if w > 0.0:
+            ws.transfer = self.engine.demand(func, w, now)
+            return max(now + prov, ws.transfer.done_ms), prov + w
+        ws.transfer = None
+        return now + prov, prov
 
     def _attach_shared(self, func: str, model_mb: float,
                        hit: Optional[WarmContainer]) -> tuple[str, float]:
@@ -460,12 +631,18 @@ class DeviceModel:
             elif self._capped(model_mb) <= self.free_hbm_mb:
                 # re-loading a previously-demoted set promotes every WARM
                 # sibling at once; that H2D copy is a real swap-in and is
-                # counted, but it happens off the critical path (a
-                # background prefetch), so no start ever pays its latency
-                if any(e.tier == WARM for e in self.pools[func]):
+                # counted.  Legacy mode treats it as a free background
+                # copy (no start ever pays its latency); overlap mode
+                # puts it on the PCIe engine, so a start arriving before
+                # the bytes land pays the honest residual.
+                repromote = any(e.tier == WARM for e in self.pools[func])
+                if repromote:
                     self.stats.swap_ins += 1
                     self.stats.swap_in_ms += swap_in_ms(model_mb)
                 self._load_shared(func, model_mb)
+                if self.overlap and repromote and swap_in_ms(model_mb) > 0:
+                    self._ws(func).transfer = self.engine.prefetch(
+                        func, swap_in_ms(model_mb), now)
                 c = WarmContainer(func, expiry, 0.0, HOT)
                 self.stats.hbm_peak_mb = max(self.stats.hbm_peak_mb,
                                              self.hbm_used_mb)
@@ -485,6 +662,49 @@ class DeviceModel:
         self.check()
         return c
 
+    def prefetch(self, func: str, model_mb: float, now: float) -> bool:
+        """Predictively re-promote ``func``'s demoted weights (WARM
+        tier) as a *background* PCIe copy — Torpor's predicted-next
+        prefetch: issued when the pipeline's previous stage dispatches,
+        the copy overlaps that stage's execution so the successor's
+        start finds the weights landed (or mostly landed).
+
+        Speculative work never hurts bystanders: the copy only runs on
+        link time no demand copy wants, and HBM is only taken when it
+        is free — a guess never demotes somebody else's weights.
+        Returns True when a copy was enqueued (overlap mode only)."""
+        if not self.overlap:
+            return False
+        self._gc(now)
+        if self.residency(func, now) != WARM:
+            return False                 # nothing demoted to re-promote
+        need = self._capped(model_mb)
+        if need > self.free_hbm_mb:
+            return False
+        w = swap_in_ms(model_mb)
+        if w <= 0.0:
+            return False
+        tr = self.engine.prefetch(func, w, now)
+        if self.shared_weights:
+            self._load_shared(func, model_mb)    # charges HBM, flips pool
+            ws = self._ws(func)
+            ws.transfer, ws.prefetched = tr, True
+        else:
+            # promote the longest-lived staged container (most useful)
+            victim = max((c for c in self.pools[func] if c.tier == WARM),
+                         key=lambda c: c.expiry)
+            self.hbm_used_mb += need
+            victim.hbm_mb = need
+            victim.tier = HOT
+            victim.transfer, victim.prefetched = tr, True
+        self.stats.swap_ins += 1
+        self.stats.swap_in_ms += w
+        self.stats.prefetch_issued += 1
+        self.stats.hbm_peak_mb = max(self.stats.hbm_peak_mb,
+                                     self.hbm_used_mb)
+        self.check()
+        return True
+
     def has_warm(self, func: str, now: float) -> bool:
         return any(c.expiry >= now for c in self.pools[func])
 
@@ -496,6 +716,7 @@ class DeviceModel:
         shared mode the weights stay until the last reference goes)."""
         self.pools[func].remove(container)
         self.hbm_used_mb -= container.hbm_mb
+        self._abandon_transfer(container)
         if self.shared_weights:
             self._drop_warm_refs(func, 1)
         self.check()
@@ -554,3 +775,14 @@ class DeviceModel:
             raise OversubscribedError(
                 f"HBM oversubscribed: {self.hbm_used_mb:.0f}"
                 f"/{self.hbm_total_mb:.0f} MB")
+        # overlap mode: the transfer ledger is work-conserving and
+        # prefetch flags only ever back resident (HOT) weights
+        self.engine.check()
+        if self.shared_weights:
+            if any(ws.prefetched and not ws.resident
+                   for ws in self.weights.values()):
+                raise OversubscribedError(
+                    "prefetched weight set not resident")
+        elif any(c.prefetched and c.tier != HOT
+                 for pool in self.pools.values() for c in pool):
+            raise OversubscribedError("prefetched container not HOT")

@@ -49,6 +49,24 @@ def swap_in_ms(model_mb: float) -> float:
     return SWAP_FIXED_MS + model_mb / H2D_GBPS
 
 
+def cold_components(model_mb: float,
+                    cold_ms: Optional[float] = None) -> tuple[float, float]:
+    """Split a full cold start into ``(provision_ms, weight_ms)``.
+
+    ``weight_ms`` is the host->HBM checkpoint copy (the part a PCIe
+    transfer engine can overlap or prefetch); ``provision_ms`` is the
+    container/runtime setup that stays CPU-side.  The weight component
+    is clamped to ``cold_ms`` — it is *part* of the measured cold start,
+    never more than it — so ``provision + weight == cold_ms`` exactly
+    (or ``(0, swap_in_ms)`` when no cold figure is known, matching the
+    ``tier_penalty_ms`` lower-bound convention)."""
+    weight = swap_in_ms(model_mb)
+    if cold_ms is None:
+        return 0.0, weight
+    weight = min(weight, max(cold_ms, 0.0))
+    return max(cold_ms - weight, 0.0), weight
+
+
 def tier_penalty_ms(tier: str, model_mb: float,
                     cold_ms: Optional[float] = None) -> float:
     """Restart penalty a container pays when its warm state is ``tier``.

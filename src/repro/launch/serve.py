@@ -60,6 +60,7 @@ def _make_scheduler(name: str, tables):
 def emulate(setting: str = "moderate-normal", n: int = 200, seed: int = 0,
             scheduler: str = "esg", scenario: str | None = None,
             autoscaler: str | None = None, slo_mult: float = 1.0,
+            overlap: bool = False, prefetch: bool = False,
             log=print) -> dict:
     """Emulated serving over the model zoo.
 
@@ -76,7 +77,7 @@ def emulate(setting: str = "moderate-normal", n: int = 200, seed: int = 0,
     sched = _make_scheduler(scheduler, tables)
     scaler = get_autoscaler(autoscaler) if autoscaler else None
     sim = ClusterSim(ZOO_APPS, tables, profiles, sched, seed=seed,
-                     autoscaler=scaler)
+                     autoscaler=scaler, overlap=overlap, prefetch=prefetch)
     if scenario is None:
         generate(sim, setting, n, profiles, seed=seed + 1)
         sim.run()
@@ -199,13 +200,20 @@ def main():
                     help="warm-pool policy (default: ewma); 'vertical' "
                          "adds fractional vGPU resizing of running pools")
     ap.add_argument("--slo-mult", type=float, default=1.0)
+    ap.add_argument("--overlap", action="store_true",
+                    help="overlapped swap pipeline: restart penalties "
+                         "become async PCIe transfer completions")
+    ap.add_argument("--prefetch", action="store_true",
+                    help="predictive next-stage weight prefetch "
+                         "(requires --overlap)")
     args = ap.parse_args()
     if args.real:
         serve_real(arch=args.arch, n_requests=args.n if args.n else 48)
     else:
         emulate(args.setting, args.n, seed=args.seed,
                 scheduler=args.scheduler, scenario=args.scenario,
-                autoscaler=args.autoscaler, slo_mult=args.slo_mult)
+                autoscaler=args.autoscaler, slo_mult=args.slo_mult,
+                overlap=args.overlap, prefetch=args.prefetch)
 
 
 if __name__ == "__main__":

@@ -72,6 +72,21 @@ class AutoscalerPolicy:
         retries placement once; False to let the queue block."""
         return False
 
+    def prefetch(self, sim, app, stage: str, inv_idx: int) -> int:
+        """Predictive next-stage weight prefetch (the Torpor lever,
+        called by the emulator when ``sim.prefetch_weights`` is on):
+        when stage ``i`` of a pipeline dispatches on ``inv_idx``, the
+        successor stages' weights are enqueued there as *background*
+        PCIe copies — locality placement probes that invoker first, so
+        the copy overlaps stage ``i``'s execution and the successor's
+        start pays only the residual.  Returns the number of copies
+        enqueued; policies may override the prediction."""
+        inv = sim.invokers[inv_idx]
+        issued = 0
+        for succ in app.edges.get(stage, ()):
+            issued += int(inv.prefetch(app.func_of[succ], sim.now))
+        return issued
+
     # ---- shared helpers ---------------------------------------------------
     @staticmethod
     def warm_count(sim, func: str) -> int:

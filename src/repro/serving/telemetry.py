@@ -208,6 +208,20 @@ class Telemetry:
         scored = self.shed_true + self.shed_false
         return self.shed_true / scored if scored else None
 
+    def prefetch_hit_rate(self) -> Optional[float]:
+        """Predictive-prefetch hits over issued copies (overlapped swap
+        pipeline); None when no prefetch was ever issued — the analogue
+        of shed precision for the transfer engine's speculation."""
+        issued = self.gpu.get("prefetch_issued", 0)
+        return self.gpu["prefetch_hits"] / issued if issued else None
+
+    def penalty_hidden_frac(self) -> Optional[float]:
+        """Fraction of the additive-model restart penalty the transfer
+        engine hid behind execution/data transfer; None when no penalty
+        was ever due."""
+        full = self.gpu.get("penalty_full_ms", 0.0)
+        return (self.gpu["penalty_hidden_ms"] / full) if full else None
+
     # ---- summaries ---------------------------------------------------------
     @property
     def n_injected(self) -> int:
@@ -252,6 +266,8 @@ class Telemetry:
             "shed_false": self.shed_false,
             "shed_unknown": self.shed_unknown,
             "shed_precision": self.shed_precision(),
+            "prefetch_hit_rate": self.prefetch_hit_rate(),
+            "penalty_hidden_frac": self.penalty_hidden_frac(),
             "gpu": dict(self.gpu),
             "latency": self.e2e.to_dict(),
             "per_stage": {

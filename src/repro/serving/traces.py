@@ -219,7 +219,9 @@ class TraceReplayScenario(Scenario):
 
     Semantics:
       * rows are sorted by time; ``time_scale`` stretches/compresses the
-        clock (2.0 = half the request rate);
+        clock (2.0 = half the request rate) and ``speedup`` divides it
+        (10.0 = replay a long trace 10x faster — the knob that fits the
+        hour-scale Azure traces into smoke-test budgets);
       * an ``app`` name not in ``app_names`` (e.g. a hashed production
         function id, or the ``*`` wildcard) is remapped deterministically
         (crc32 of ``name/uid``) onto ``app_names`` — seeds do not change
@@ -232,8 +234,12 @@ class TraceReplayScenario(Scenario):
 
     def __init__(self, csv_path: Optional[str] = None,
                  rows: Optional[Sequence[tuple[float, str]]] = None,
-                 time_scale: float = 1.0, **kw):
+                 time_scale: float = 1.0, speedup: float = 1.0, **kw):
         super().__init__(**kw)
+        if not speedup > 0.0:          # also rejects NaN
+            raise ValueError(
+                f"trace-replay: speedup must be > 0 (it divides the "
+                f"trace clock; 10.0 replays 10x faster), got {speedup!r}")
         if rows is None and csv_path is not None:
             rows = self.read_csv(csv_path)
         if rows is None:
@@ -241,7 +247,8 @@ class TraceReplayScenario(Scenario):
         if not rows:
             raise ValueError("trace-replay: empty trace")
         self.rows = sorted((float(t), str(app)) for t, app in rows)
-        self.time_scale = time_scale
+        self.speedup = speedup
+        self.time_scale = time_scale / speedup
 
     @staticmethod
     def read_csv(path: str) -> list[tuple[float, str]]:

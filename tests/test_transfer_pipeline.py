@@ -1,0 +1,502 @@
+"""Differential/property harness for the overlapped swap pipeline.
+
+Locks the PR-4 refactor (restart penalties as an asynchronous PCIe
+transfer-engine timeline with predictive prefetch) against the PR-3
+additive-scalar model:
+
+  * **differential replay** — every scenario in ``serving.traces`` runs
+    with the new kwargs defaulted vs passed explicitly off: the event
+    timeline must be bit-identical (the fig6 golden fixture in
+    ``test_locality_scheduling`` pins the same path against checked-in
+    PR-3 numbers); ``prefetch`` without ``overlap`` is rejected;
+  * **monotone improvement** — with overlap on, every task's charged
+    restart penalty is bounded by what the additive model would have
+    charged (``penalty_ms <= full_penalty_ms``), execution never starts
+    before dispatch, and the sim-level penalty ledgers equal the task
+    sums;
+  * **work conservation** — the transfer engine books every byte of
+    every movement exactly once: a prefetch promoted to demand copies
+    only the remaining bytes, and ``busy == demand + prefetch`` holds
+    mid-walk under random op sequences;
+  * **prefetch semantics** — hits/waste accounting, refusal conditions,
+    background re-promotions paying honest residuals;
+  * **satellites** — ``TraceReplay(speedup=...)`` and the Azure
+    invocation-count converter.
+"""
+import math
+import pathlib
+import sys
+
+import numpy as np
+import pytest
+
+from repro.cluster.emulator import ClusterSim
+from repro.core.profiles import PAPER_FUNCTIONS, ProfileTable
+from repro.core.scheduler import ESGScheduler
+from repro.core.workflows import PAPER_APPS
+from repro.gpu import (COLD, HOT, WARM, DeviceModel, TransferEngine,
+                       cold_components, swap_in_ms)
+from repro.serving import Gateway, get_autoscaler, get_scenario
+from repro.serving.traces import SCENARIOS, TraceReplayScenario
+
+APPS = list(PAPER_APPS)
+HERE = pathlib.Path(__file__).resolve().parent
+HBM_MB = 256.0          # finite HBM: the warm swap tier is exercised
+N_REQ = 24              # per-scenario replay length (keeps the suite fast)
+
+
+@pytest.fixture(scope="module")
+def tables():
+    return {n: ProfileTable.build(p) for n, p in PAPER_FUNCTIONS.items()}
+
+
+def _run(tables, scenario, n=N_REQ, seed=0, slo_mult=1.0,
+         placement="locality", shared=False, hbm=None, **sim_kw):
+    sim = ClusterSim(PAPER_APPS, tables, PAPER_FUNCTIONS,
+                     ESGScheduler(PAPER_APPS, tables, placement=placement),
+                     seed=seed, count_overhead=False,
+                     autoscaler=get_autoscaler("ewma"),
+                     hbm_per_vgpu_mb=hbm, shared_weights=shared, **sim_kw)
+    gw = Gateway(sim)
+    sc = get_scenario(scenario, app_names=APPS)
+    gw.inject(sc, n, seed=seed + 1, slo_mult=slo_mult)
+    tel = gw.run()
+    return tel, sim
+
+
+def _timeline(sim):
+    """Every observable event of a run, including the new penalty
+    fields — if any placement, tier, price, quota or charge differs,
+    so does this."""
+    tasks = [(t.start_ms, t.end_ms, t.exec_start_ms, t.invoker, t.stage,
+              t.func, t.config, t.tier, t.cold, t.cost, t.quota_slices,
+              t.penalty_ms, t.full_penalty_ms)
+             for t in sim.tasks]
+    done = [(i.uid, i.arrival_ms, i.finish_ms) for i in sim.completed]
+    return tasks, done, sim.total_cost, sim.cold_starts, sim.remote_transfers
+
+
+# ---------------------------------------------------------------------------
+# transfer engine: unit + work-conservation properties
+# ---------------------------------------------------------------------------
+def test_demand_copy_takes_exactly_its_duration():
+    eng = TransferEngine()
+    tr = eng.demand("f", 40.0, 100.0)
+    assert tr.done_ms == 140.0 and tr.residual_ms(110.0) == 30.0
+    assert tr.residual_ms(150.0) == 0.0
+    assert eng.busy_ms == eng.demand_ms == 40.0
+
+
+def test_prefetch_queue_is_fifo_and_pauses_under_demand():
+    eng = TransferEngine()
+    a = eng.prefetch("a", 30.0, 0.0)
+    b = eng.prefetch("b", 20.0, 0.0)
+    assert eng.eta(a, 0.0) == 30.0 and eng.eta(b, 0.0) == 50.0
+    # a demand copy at t=10 blocks the link until t=50: the 10ms of `a`
+    # already copied stay done, the rest resumes after
+    eng.demand("c", 40.0, 10.0)
+    assert eng.eta(a, 10.0) == pytest.approx(70.0)    # 20ms left after t=50
+    assert eng.eta(b, 10.0) == pytest.approx(90.0)
+    eng._advance(200.0)
+    assert not eng.queue and a.done_ms == pytest.approx(70.0)
+    assert b.done_ms == pytest.approx(90.0)
+    assert eng.busy_ms == pytest.approx(30.0 + 20.0 + 40.0)
+    assert eng.prefetch_ms == pytest.approx(50.0)
+
+
+def test_promote_books_only_remaining_bytes():
+    eng = TransferEngine()
+    tr = eng.prefetch("f", 50.0, 0.0)
+    eng.promote(tr, 30.0)             # 30ms already landed in background
+    assert tr.done_ms == pytest.approx(50.0)
+    assert eng.prefetch_ms == pytest.approx(30.0)
+    assert eng.demand_ms == pytest.approx(20.0)
+    assert eng.busy_ms == pytest.approx(50.0)   # one movement, booked once
+    eng.check()
+
+
+def test_cancel_keeps_only_performed_work():
+    eng = TransferEngine()
+    tr = eng.prefetch("f", 50.0, 0.0)
+    eng._advance(15.0)
+    eng.cancel(tr)
+    assert eng.busy_ms == pytest.approx(15.0)
+    assert not eng.queue and math.isinf(tr.done_ms)
+    eng.check()
+
+
+def test_engine_random_walk_is_work_conserving():
+    rng = np.random.default_rng(5)
+    eng = TransferEngine()
+    now, live = 0.0, []
+    for _ in range(500):
+        now += float(rng.uniform(0.0, 30.0))
+        op = int(rng.integers(4))
+        if op == 0:
+            eng.demand(f"d{_}", float(rng.uniform(1.0, 60.0)), now)
+        elif op == 1:
+            live.append(eng.prefetch(f"p{_}", float(rng.uniform(1.0, 60.0)),
+                                     now))
+        elif op == 2 and live:
+            tr = live.pop(int(rng.integers(len(live))))
+            if tr in eng.queue:
+                done = eng.promote(tr, now).done_ms
+                # done < now is fine (the copy drained in background
+                # before the promote); it can never exceed a fresh
+                # demand copy of the full movement
+                assert done <= now + tr.total_ms + 1e-9
+        elif op == 3 and live:
+            eng.cancel(live.pop(int(rng.integers(len(live)))))
+        eng.check()
+        eng._advance(now)                 # settle completions before probing
+        for tr in list(eng.queue):        # eta() itself advances lazily
+            assert eng.eta(tr, now) >= now - 1e-9
+    eng._advance(now + 1e6)
+    eng.check()
+    assert not eng.queue
+
+
+# ---------------------------------------------------------------------------
+# device model: overlap-mode start timelines + prefetch semantics
+# ---------------------------------------------------------------------------
+def _dev(shared, hbm=450.0, vgpus=2):
+    # 900 MB total: f(600) + g(900-capped) cannot coexist, so starting
+    # ``g`` demotes ``f`` — the WARM state the overlap tests need
+    return DeviceModel(vgpus=vgpus, hbm_per_vgpu_mb=hbm,
+                       shared_weights=shared, overlap=True)
+
+
+def _demoted_f(shared, f_expiry=1e6):
+    """Device where ``f``'s 600-MB weights sit demoted (WARM tier) and
+    the HBM is free again: start f, park it, squeeze it out with g,
+    then let g's keep-alive expire."""
+    dev = _dev(shared)
+    a, _ = dev.start("f", 1, 600.0, 0.0)
+    dev.stop(a.aid, f_expiry)
+    ag, _ = dev.start("g", 1, 400.0, 1.0)     # pressure: f demoted
+    assert dev.residency("f", 1.0) == WARM
+    dev.stop(ag.aid, 2.0)
+    dev._gc(3.0)                              # g's keep-alive expires
+    return dev
+
+
+@pytest.mark.parametrize("shared", [False, True])
+def test_warm_start_returns_completion_time(shared):
+    dev = _demoted_f(shared)
+    a2, tier = dev.start("f", 1, 600.0, 4.0)
+    assert tier == WARM
+    assert a2.ready_ms == pytest.approx(4.0 + swap_in_ms(600.0))
+    assert a2.full_penalty_ms == pytest.approx(swap_in_ms(600.0))
+
+
+@pytest.mark.parametrize("shared", [False, True])
+def test_cold_start_overlaps_provisioning_with_weight_copy(shared):
+    dev = _dev(shared)
+    a, tier = dev.start("f", 1, 600.0, 10.0, cold_ms=5000.0)
+    prov, w = cold_components(600.0, 5000.0)
+    assert tier == COLD
+    assert a.ready_ms == pytest.approx(10.0 + max(prov, w))
+    assert a.full_penalty_ms == pytest.approx(5000.0)   # prov + w
+    assert dev.engine.demand_ms == pytest.approx(w)
+
+
+@pytest.mark.parametrize("shared", [False, True])
+def test_prefetch_hides_swap_and_counts_hit(shared):
+    dev = _demoted_f(shared)
+    assert dev.prefetch("f", 600.0, 4.0)
+    assert dev.residency("f", 4.0) == HOT         # promoted, copy in flight
+    w = swap_in_ms(600.0)
+    # start long after the copy landed: charged residual is zero
+    a2, tier = dev.start("f", 1, 600.0, 4.0 + w + 50.0)
+    assert tier == HOT and a2.ready_ms == pytest.approx(4.0 + w + 50.0)
+    assert a2.full_penalty_ms == pytest.approx(w)  # additive would pay swap
+    assert dev.stats.prefetch_issued == 1 and dev.stats.prefetch_hits == 1
+
+
+@pytest.mark.parametrize("shared", [False, True])
+def test_prefetch_hit_mid_flight_pays_only_residual(shared):
+    # t=50: past the setup cold starts' demand copies, so the link is
+    # idle and the prefetch starts copying immediately
+    dev = _demoted_f(shared)
+    dev.prefetch("f", 600.0, 50.0)
+    w = swap_in_ms(600.0)
+    t_hit = 50.0 + w / 2.0
+    a2, tier = dev.start("f", 1, 600.0, t_hit)
+    assert tier == HOT
+    residual = a2.ready_ms - t_hit
+    assert 0.0 < residual < w
+    assert residual == pytest.approx(w / 2.0)
+    assert a2.full_penalty_ms == pytest.approx(w)
+    assert dev.stats.prefetch_hits == 1
+
+
+@pytest.mark.parametrize("shared", [False, True])
+def test_prefetch_wasted_on_demotion_and_expiry(shared):
+    dev = _demoted_f(shared, f_expiry=100.0)      # f expires at t=100
+    assert dev.prefetch("f", 600.0, 4.0)
+    dev._gc(200.0)                                # f's container expired
+    assert dev.stats.prefetch_wasted == 1
+    assert dev.stats.prefetch_hits == 0
+    dev.engine.check()                            # cancelled, not re-booked
+
+
+def test_prefetch_refusals():
+    dev = _dev(False)
+    assert not dev.prefetch("f", 600.0, 0.0)      # nothing staged: COLD
+    a, _ = dev.start("f", 1, 600.0, 0.0)
+    dev.stop(a.aid, 1e6)
+    assert not dev.prefetch("f", 600.0, 1.0)      # already HOT
+    # overlap off: never
+    legacy = DeviceModel(vgpus=2, hbm_per_vgpu_mb=900.0)
+    legacy.add_warm("f", 1e6, 600.0, 0.0)
+    assert not legacy.prefetch("f", 600.0, 1.0)
+    # no free HBM: a guess never demotes somebody else's weights
+    dev2 = _dev(False, hbm=300.0, vgpus=2)
+    a2, _ = dev2.start("f", 1, 600.0, 0.0)
+    dev2.stop(a2.aid, 1e6)
+    dev2.start("g", 1, 600.0, 1.0)                # demotes f, fills HBM
+    assert dev2.residency("f", 1.0) == WARM
+    assert not dev2.prefetch("f", 600.0, 2.0)
+
+
+def test_shared_add_warm_repromotion_pays_honest_residual():
+    """Legacy mode re-promotes a demoted shared set for free; overlap
+    mode puts the copy on the engine — a start arriving before the
+    bytes land pays the residual, one arriving after pays nothing."""
+    dev = _demoted_f(True)
+    dev.add_warm("f", 1e6, 600.0, 50.0)           # prewarm re-loads f
+    assert dev.residency("f", 50.0) == HOT        # (link idle by t=50)
+    w = swap_in_ms(600.0)
+    a2, tier = dev.start("f", 1, 600.0, 50.0 + w / 4.0)
+    assert tier == HOT
+    assert a2.ready_ms - (50.0 + w / 4.0) == pytest.approx(0.75 * w)
+    assert a2.full_penalty_ms == pytest.approx(w)
+    # but it was never a *predictive* prefetch: no hit/issue accounting
+    assert dev.stats.prefetch_issued == 0 and dev.stats.prefetch_hits == 0
+
+
+FUNCS = [("a", 300.0), ("b", 700.0), ("c", 150.0), ("d", 0.0)]
+
+
+@pytest.mark.parametrize("shared", [False, True])
+def test_overlap_device_random_walk_invariants(shared):
+    """500 random start/stop/prefetch/prewarm/retire/gc steps through
+    the public API with the transfer engine in the loop: ledgers and
+    engine stay consistent, every start's timeline obeys
+    ``now <= ready`` and ``ready - now <= full`` (monotone improvement
+    over the additive model)."""
+    rng = np.random.default_rng(13)
+    dev = DeviceModel(vgpus=4, hbm_per_vgpu_mb=256.0, shared_weights=shared,
+                      overlap=True)
+    now, live = 0.0, []
+    for step in range(500):
+        now += float(rng.uniform(0.0, 50.0))
+        op = int(rng.integers(7))
+        f, mb = FUNCS[int(rng.integers(len(FUNCS)))]
+        if op == 0:
+            sl = int(rng.integers(1, 9))
+            if dev.fits(sl, mb, f, now):
+                alloc, tier = dev.start(f, sl, mb, now,
+                                        cold_ms=float(rng.uniform(0, 3000)))
+                assert tier in (HOT, WARM, COLD)
+                assert alloc.ready_ms >= now - 1e-9
+                assert alloc.ready_ms - now <= alloc.full_penalty_ms + 1e-9
+                live.append(alloc)
+        elif op == 1 and live:
+            a = live[int(rng.integers(len(live)))]
+            dev.resize(a.aid, int(rng.integers(1, 17)))
+        elif op == 2 and live:
+            a = live.pop(int(rng.integers(len(live))))
+            dev.stop(a.aid, now + float(rng.uniform(100.0, 5000.0)))
+        elif op == 3:
+            dev.add_warm(f, now + float(rng.uniform(100.0, 5000.0)), mb, now)
+        elif op == 4:
+            dev.prefetch(f, mb, now)
+        elif op == 5:
+            entries = dev.warm_entries(f, now)
+            if entries:
+                dev.retire(f, entries[int(rng.integers(len(entries)))])
+        else:
+            dev._gc(now)
+        dev.check()                       # includes engine work conservation
+    for a in live:
+        dev.stop(a.aid, now + 100.0)
+    dev._gc(now + 1e9)
+    assert dev.used_slices == 0 and dev.hbm_used_mb == 0.0
+    assert not dev.engine.queue           # no orphaned background copies
+
+
+# ---------------------------------------------------------------------------
+# differential replay: legacy configurations cannot drift
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("scenario", sorted(SCENARIOS))
+def test_overlap_off_is_bit_identical_to_legacy(scenario, tables):
+    """(a) ``overlap=False, prefetch=False`` passed explicitly must
+    replay the exact event timeline of a run that never mentions the
+    new kwargs — across every serving scenario (the fig6 mmpp golden
+    fixture in test_locality_scheduling pins this same path against
+    checked-in PR-3 numbers)."""
+    tel_d, sim_d = _run(tables, scenario, hbm=HBM_MB)
+    tel_e, sim_e = _run(tables, scenario, hbm=HBM_MB,
+                        overlap=False, prefetch=False)
+    assert _timeline(sim_d) == _timeline(sim_e)
+    assert tel_d.summary() == tel_e.summary()
+    # additive accounting: charged penalty IS the full penalty
+    assert all(t.penalty_ms == t.full_penalty_ms for t in sim_d.tasks)
+
+
+def test_prefetch_requires_overlap(tables):
+    with pytest.raises(ValueError, match="prefetch.*overlap"):
+        _run(tables, "mmpp", n=1, overlap=False, prefetch=True)
+
+
+# ---------------------------------------------------------------------------
+# overlap on: monotone improvement + consistent accounting, all scenarios
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("scenario", sorted(SCENARIOS))
+def test_overlap_never_increases_per_task_latency(scenario, tables):
+    """(b) With the transfer engine in the loop, no task is ever
+    charged more than the additive model would have charged it, the
+    sim-level penalty ledgers equal the task sums, and no device's
+    PCIe time is double-booked."""
+    _, sim = _run(tables, scenario, placement="memory", shared=True,
+                  hbm=HBM_MB, overlap=True, prefetch=True)
+    for t in sim.tasks:
+        assert t.penalty_ms >= -1e-9
+        assert t.penalty_ms <= t.full_penalty_ms + 1e-9, \
+            f"task {t.tid} ({t.tier}) charged {t.penalty_ms} > " \
+            f"additive {t.full_penalty_ms}"
+        assert t.exec_start_ms >= t.start_ms - 1e-9
+    g = sim.gpu_summary()
+    assert g["penalty_charged_ms"] == \
+        pytest.approx(sum(t.penalty_ms for t in sim.tasks))
+    assert g["penalty_full_ms"] == \
+        pytest.approx(sum(t.full_penalty_ms for t in sim.tasks))
+    assert g["penalty_hidden_ms"] >= -1e-9
+    for inv in sim.invokers:
+        inv.device.engine.check()         # busy == demand + prefetch
+
+
+def test_overlap_with_prefetch_hides_warm_penalty(tables):
+    """The tentpole's point, pinned on one bursty scenario under real
+    memory pressure: warm restarts are charged strictly less than the
+    additive swap_in_ms model, some of it thanks to scored prefetch
+    hits, and telemetry surfaces the hit rate."""
+    tel_a, sim_a = _run(tables, "mmpp", n=40, placement="memory",
+                        shared=True, hbm=128.0)
+    tel_o, sim_o = _run(tables, "mmpp", n=40, placement="memory",
+                        shared=True, hbm=128.0, overlap=True, prefetch=True)
+    ga, go = sim_a.gpu_summary(), sim_o.gpu_summary()
+    assert ga["swap_ins"] > 0, "baseline not under pressure"
+    assert ga["penalty_hidden_ms"] == 0.0
+    assert go["penalty_hidden_ms"] > 0.0
+    assert go["prefetch_issued"] > 0 and go["prefetch_hits"] > 0
+    warm = [t for t in sim_o.tasks
+            if t.tier == WARM or (t.tier == HOT and t.full_penalty_ms > 0)]
+    assert warm and sum(t.penalty_ms for t in warm) < \
+        sum(t.full_penalty_ms for t in warm) - 1e-9
+    s = tel_o.summary()
+    assert 0.0 < s["prefetch_hit_rate"] <= 1.0
+    assert 0.0 < s["penalty_hidden_frac"] <= 1.0
+    assert tel_a.summary()["prefetch_hit_rate"] is None
+
+
+def test_overlap_run_is_deterministic(tables):
+    tel1, _ = _run(tables, "flash-crowd", placement="memory", shared=True,
+                   hbm=HBM_MB, overlap=True, prefetch=True)
+    tel2, _ = _run(tables, "flash-crowd", placement="memory", shared=True,
+                   hbm=HBM_MB, overlap=True, prefetch=True)
+    assert tel1.summary() == tel2.summary()
+
+
+# ---------------------------------------------------------------------------
+# satellites: TraceReplay speedup + Azure converter
+# ---------------------------------------------------------------------------
+def test_trace_replay_speedup_compresses_time():
+    rows = [(1000.0, "a"), (3000.0, "b"), (5000.0, "a")]
+    base = TraceReplayScenario(rows=rows).arrivals(["a", "b"], 3)
+    fast = TraceReplayScenario(rows=rows, speedup=10.0).arrivals(["a", "b"], 3)
+    for b, f in zip(base, fast):
+        assert f.t_ms == pytest.approx(b.t_ms / 10.0)
+        assert f.app == b.app
+    # composes with time_scale (which stretches)
+    both = TraceReplayScenario(rows=rows, time_scale=2.0,
+                               speedup=4.0).arrivals(["a", "b"], 3)
+    assert both[-1].t_ms == pytest.approx(5000.0 * 2.0 / 4.0)
+
+
+@pytest.mark.parametrize("bad", [0.0, -1.0, float("nan")])
+def test_trace_replay_speedup_validation(bad):
+    with pytest.raises(ValueError, match="speedup must be > 0"):
+        TraceReplayScenario(rows=[(1.0, "a")], speedup=bad)
+
+
+def _convert_azure():
+    sys.path.insert(0, str(HERE.parent / "benchmarks" / "traces"))
+    try:
+        import convert_azure
+    finally:
+        sys.path.pop(0)
+    return convert_azure
+
+
+AZURE_FIXTURE = HERE / "fixtures" / "azure_2019_3min_sample.csv"
+
+
+def test_convert_azure_fixture_roundtrip(tmp_path):
+    ca = _convert_azure()
+    counts = ca.load_counts(str(AZURE_FIXTURE))
+    assert len(counts) == 5
+    assert counts["f0e1d2c3b4a59687"] == [4, 9, 2]
+    rows = ca.convert(counts, seed=0)
+    assert len(rows) == sum(sum(c) for c in counts.values())
+    # arrivals stay inside their minute and come out time-sorted
+    assert rows == sorted(rows, key=lambda r: (r[0], r[1]))
+    assert all(0.0 <= t < 3 * 60_000.0 for t, _ in rows)
+    # same seed => identical trace; different seed => different jitter
+    assert rows == ca.convert(counts, seed=0)
+    assert rows != ca.convert(counts, seed=1)
+    # the written CSV replays through the scenario engine
+    out = tmp_path / "azure_trace.csv"
+    ca.write_trace(rows, str(out))
+    parsed = TraceReplayScenario.read_csv(str(out))
+    assert len(parsed) == len(rows)
+    sc = TraceReplayScenario(csv_path=str(out), speedup=100.0)
+    arr = sc.arrivals(APPS, 10, seed=0)
+    assert len(arr) == 10 and all(a.app in APPS for a in arr)
+
+
+def test_convert_azure_apps_minutes_scale():
+    ca = _convert_azure()
+    counts = ca.load_counts(str(AZURE_FIXTURE))
+    # --apps keeps the busiest N (f0e1... has 15, 09f8/cafebabe 9/12)
+    top2 = ca.convert(counts, apps=2, seed=0)
+    assert {a for _, a in top2} == {"f0e1d2c3b4a59687", "cafebabe44556677"}
+    # --minutes truncates the horizon
+    two_min = ca.convert(counts, minutes=2, seed=0)
+    assert all(t < 2 * 60_000.0 for t, _ in two_min)
+    assert len(two_min) == sum(sum(c[:2]) for c in counts.values())
+    # integer scale multiplies counts exactly
+    double = ca.convert(counts, scale=2.0, seed=0)
+    assert len(double) == 2 * sum(sum(c) for c in counts.values())
+    with pytest.raises(ValueError, match="scale must be > 0"):
+        ca.convert(counts, scale=0.0)
+
+
+def test_convert_azure_cli(tmp_path, capsys):
+    ca = _convert_azure()
+    out = tmp_path / "t.csv"
+    assert ca.main([str(AZURE_FIXTURE), "--apps", "3", "--minutes", "3",
+                    "--scale", "1.0", "--seed", "7",
+                    "--out", str(out)]) == 0
+    assert "[convert-azure]" in capsys.readouterr().out
+    rows = TraceReplayScenario.read_csv(str(out))
+    assert rows and len({a for _, a in rows}) == 3
+
+
+def test_convert_azure_rejects_bad_schema(tmp_path):
+    ca = _convert_azure()
+    p = tmp_path / "bad.csv"
+    p.write_text("time,function\n1,f\n")
+    with pytest.raises(ValueError, match="invocation-count CSV"):
+        ca.load_counts(str(p))
