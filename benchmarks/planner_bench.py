@@ -1,0 +1,244 @@
+"""Planner/emulator fast-path benchmark: plans/sec + trace-replay wall.
+
+Measures the three PR-5 levers against the pre-optimization reference
+(plan cache off, per-config ESG_1Q loop, full-scan emulator):
+
+  * **plans/sec** — the scheduler's ``plan()`` replayed over the call
+    stream recorded from a real Azure-fixture run: warm plan-cache path
+    vs the vectorized engine (cache off) vs the legacy per-config loop;
+  * **end-to-end wall-clock** — the 3-minute Azure 2019 fixture
+    (``tests/fixtures/azure_2019_3min_sample.csv`` through
+    ``convert_azure``) replayed at ``speedup=1``, fast vs legacy;
+  * **per-scenario wall-clock** — every serving scenario, fast vs
+    legacy, with a bit-identical schedule digest check on each cell.
+
+Results land in ``BENCH_planner.json`` (repo root, committed) so later
+PRs have a perf trajectory.  The regression guard compares *ratios*
+(fast/legacy speedups), which are machine-independent, never absolute
+times: the run fails if the cached plans/sec speedup or the Azure
+replay wall speedup drops below ``REGRESSION_FRAC`` of the checked-in
+baseline, or below the absolute acceptance floors (10x plans/sec, 3x
+wall).  ``--update`` rewrites the baseline after an intentional change.
+
+    PYTHONPATH=src python benchmarks/planner_bench.py --smoke
+    PYTHONPATH=src python benchmarks/planner_bench.py --seed 3 --update
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+import time
+
+HERE = pathlib.Path(__file__).resolve().parent
+sys.path.insert(0, str(HERE / "traces"))
+
+from common import PAPER_APPS, ClusterSim, paper_tables  # noqa: E402
+from convert_azure import convert, load_counts  # noqa: E402
+from repro.core.profiles import PAPER_FUNCTIONS  # noqa: E402
+from repro.core.scheduler import ESGScheduler  # noqa: E402
+from repro.serving import Gateway, get_autoscaler, get_scenario  # noqa: E402
+from repro.serving.traces import TraceReplayScenario  # noqa: E402
+
+SCENARIO_NAMES = ["uniform-normal", "diurnal", "mmpp", "flash-crowd",
+                  "azure-tail", "trace-replay"]
+AZURE_FIXTURE = HERE.parent / "tests" / "fixtures" / \
+    "azure_2019_3min_sample.csv"
+BASELINE = HERE.parent / "BENCH_planner.json"
+
+# acceptance floors (ISSUE 5) and the loose trajectory guard
+CACHED_SPEEDUP_MIN = 10.0
+WALL_SPEEDUP_MIN = 3.0
+REGRESSION_FRAC = 0.7          # fail when a ratio drops >30% vs baseline
+
+
+class _RecordingESG(ESGScheduler):
+    """ESG scheduler that records its ``plan()`` call stream so the
+    plans/sec micro-bench replays a *real* workload's queries."""
+
+    def __init__(self, *a, **kw):
+        super().__init__(*a, **kw)
+        self.calls: list[tuple] = []
+        self.recording = True
+
+    def plan(self, sim, app, stage, jobs, now):
+        if self.recording:
+            self.calls.append((sim, app, stage, list(jobs), now))
+        return super().plan(sim, app, stage, jobs, now)
+
+
+def schedule_digest(sim: ClusterSim) -> tuple:
+    """Everything observable about a run's schedule (matches the
+    differential tests' timeline): any placement/pricing/timing drift
+    between fast and legacy shows up here."""
+    tasks = tuple((t.start_ms, t.end_ms, t.exec_start_ms, t.invoker,
+                   t.stage, t.func, t.config, t.tier, t.cold, t.cost,
+                   t.quota_slices, t.penalty_ms, t.full_penalty_ms)
+                  for t in sim.tasks)
+    done = tuple((i.uid, i.arrival_ms, i.finish_ms) for i in sim.completed)
+    return (tasks, done, sim.total_cost, sim.cold_starts,
+            sim.remote_transfers, tuple(sorted(sim.gpu_summary().items())))
+
+
+def run_once(scenario, n: int, seed: int, fast: bool, tables,
+             record: bool = False):
+    cls = _RecordingESG if record else ESGScheduler
+    sched = cls(PAPER_APPS, tables, plan_cache=fast, vectorized=fast)
+    sim = ClusterSim(PAPER_APPS, tables, PAPER_FUNCTIONS, sched,
+                     seed=seed, count_overhead=False,
+                     autoscaler=get_autoscaler("ewma"), sparse=fast)
+    gw = Gateway(sim)
+    gw.inject(scenario, n, seed=seed + 1, slo_mult=1.0)
+    t0 = time.perf_counter()
+    gw.run()
+    wall = time.perf_counter() - t0
+    return sim, sched, wall
+
+
+def time_replay(sched, calls, min_s: float = 0.2) -> float:
+    """plans/sec of ``sched.plan`` over the recorded call stream."""
+    done, t0 = 0, time.perf_counter()
+    while True:
+        for sim, app, stage, jobs, now in calls:
+            sched.plan(sim, app, stage, jobs, now)
+        done += len(calls)
+        if time.perf_counter() - t0 >= min_s:
+            break
+    return done / (time.perf_counter() - t0)
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="scenario subset / smaller n for CI")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--n", type=int, default=None,
+                    help="requests per scenario cell")
+    ap.add_argument("--azure-n", type=int, default=200,
+                    help="requests for the Azure-fixture replay")
+    ap.add_argument("--update", action="store_true",
+                    help="rewrite BENCH_planner.json instead of "
+                         "guarding against it")
+    ap.add_argument("--out", default=str(BASELINE))
+    args = ap.parse_args()
+
+    scenarios = ["mmpp", "azure-tail"] if args.smoke else SCENARIO_NAMES
+    n = args.n or (24 if args.smoke else 60)
+    tables = paper_tables()
+
+    # ---- end-to-end: the 3-min Azure fixture at speedup=1 ----------------
+    rows = convert(load_counts(str(AZURE_FIXTURE)), seed=args.seed)
+    make_sc = lambda: TraceReplayScenario(rows=rows, speedup=1.0)  # noqa: E731
+    sim_f, sched_f, wall_f = run_once(make_sc(), args.azure_n, args.seed,
+                                      True, tables, record=True)
+    sim_l, _, wall_l = run_once(make_sc(), args.azure_n, args.seed,
+                                False, tables)
+    azure_identical = schedule_digest(sim_f) == schedule_digest(sim_l)
+    azure = {
+        "n": args.azure_n, "tasks": len(sim_f.tasks),
+        "plans": len(sim_f.sched_overheads_ms),
+        "wall_s_fast": wall_f, "wall_s_legacy": wall_l,
+        "wall_speedup": wall_l / wall_f, "identical": azure_identical,
+    }
+    print(f"[planner-bench] azure 3-min fixture (n={args.azure_n}): "
+          f"fast {wall_f:.2f}s vs legacy {wall_l:.2f}s -> "
+          f"{azure['wall_speedup']:.1f}x  identical={azure_identical}")
+
+    # ---- plans/sec over the recorded call stream -------------------------
+    sched_f.recording = False
+    # the real run's cache behaviour, snapshotted *before* the replay
+    # loops below hammer the same cache with micro-bench lookups
+    run_cache_stats = sched_f.cache.stats.as_dict()
+    # every engine times the same call subset so the ratios are
+    # apples-to-apples (the stream is not homogeneous: early calls hit
+    # cold caches and different suffixes than late ones)
+    calls = list(sched_f.calls)[:120]
+    cached = time_replay(sched_f, calls)             # warm plan cache
+    vec = time_replay(ESGScheduler(PAPER_APPS, tables, plan_cache=False,
+                                   vectorized=True), calls)
+    legacy = time_replay(ESGScheduler(PAPER_APPS, tables, plan_cache=False,
+                                      vectorized=False), calls)
+    plans = {
+        "cached": cached, "vectorized": vec, "legacy": legacy,
+        "cached_speedup": cached / legacy,
+        "vectorized_speedup": vec / legacy,
+        "recorded_calls": len(sched_f.calls), "timed_calls": len(calls),
+    }
+    print(f"[planner-bench] plans/sec: cached {cached:,.0f} | vectorized "
+          f"{vec:,.0f} | legacy {legacy:,.0f}  (cached {plans['cached_speedup']:.0f}x, "
+          f"vectorized {plans['vectorized_speedup']:.1f}x)")
+
+    # ---- per-scenario sweep ----------------------------------------------
+    per_scenario = {}
+    all_identical = azure_identical
+    for name in scenarios:
+        sc = get_scenario(name, app_names=list(PAPER_APPS))
+        sf, schedf, wf = run_once(sc, n, args.seed, True, tables)
+        sc = get_scenario(name, app_names=list(PAPER_APPS))
+        sl, _, wl = run_once(sc, n, args.seed, False, tables)
+        same = schedule_digest(sf) == schedule_digest(sl)
+        all_identical &= same
+        cs = schedf.cache.stats
+        per_scenario[name] = {
+            "wall_s_fast": wf, "wall_s_legacy": wl, "speedup": wl / wf,
+            "identical": same, "sparse_skips": sf.sparse_skips,
+            "plans": len(sf.sched_overheads_ms),
+            "cache_hit_rate": cs.hits / cs.lookups if cs.lookups else 0.0,
+        }
+        print(f"[planner-bench] {name:14s} n={n}: {wl:.2f}s -> {wf:.2f}s "
+              f"({wl / wf:.1f}x)  hit-rate {per_scenario[name]['cache_hit_rate']:.2f} "
+              f"identical={same}")
+
+    report = {
+        "meta": {"seed": args.seed, "smoke": args.smoke, "n": n,
+                 "scenarios": scenarios},
+        "azure_replay": azure,
+        "plans_per_sec": plans,
+        "cache": run_cache_stats,
+        "scenarios": per_scenario,
+        "guards": {"cached_speedup_min": CACHED_SPEEDUP_MIN,
+                   "wall_speedup_min": WALL_SPEEDUP_MIN,
+                   "regression_frac": REGRESSION_FRAC},
+    }
+
+    # ---- guards ----------------------------------------------------------
+    failures = []
+    if not all_identical:
+        failures.append("fast path diverged from the legacy schedule")
+    if plans["cached_speedup"] < CACHED_SPEEDUP_MIN:
+        failures.append(f"cached plans/sec speedup "
+                        f"{plans['cached_speedup']:.1f}x < "
+                        f"{CACHED_SPEEDUP_MIN}x floor")
+    if azure["wall_speedup"] < WALL_SPEEDUP_MIN:
+        failures.append(f"azure replay wall speedup "
+                        f"{azure['wall_speedup']:.1f}x < "
+                        f"{WALL_SPEEDUP_MIN}x floor")
+    out = pathlib.Path(args.out)
+    if args.update or not out.exists():
+        out.write_text(json.dumps(report, indent=2, sort_keys=True) + "\n")
+        print(f"[planner-bench] baseline written -> {out}")
+    else:
+        base = json.loads(out.read_text())
+        for label, ours, theirs in [
+                ("cached plans/sec speedup", plans["cached_speedup"],
+                 base["plans_per_sec"]["cached_speedup"]),
+                ("azure wall speedup", azure["wall_speedup"],
+                 base["azure_replay"]["wall_speedup"])]:
+            if ours < REGRESSION_FRAC * theirs:
+                failures.append(
+                    f"{label} regressed: {ours:.1f}x vs baseline "
+                    f"{theirs:.1f}x (floor {REGRESSION_FRAC:.0%})")
+        print(f"[planner-bench] baseline {out} holds "
+              f"(regression floor {REGRESSION_FRAC:.0%})"
+              if not failures else
+              f"[planner-bench] REGRESSION vs {out}")
+    for f in failures:
+        print(f"[planner-bench] FAIL: {f}")
+    if not failures:
+        print("[planner-bench] OK")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

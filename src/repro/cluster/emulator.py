@@ -18,12 +18,20 @@ comparisons isolate the scheduling algorithm (paper §4.2).  Warm-pool
 policies plug in via the ``autoscaler`` argument, and an optional
 ``admission`` callback (see ``repro.serving.gateway``) may reject
 arrivals at the door (load shedding).
+
+The scheduling core is *event-sparse* by default (``sparse=True``):
+queue retries only run when the triggering event could actually have
+changed their placement feasibility or candidate configs, and placement
+fallbacks walk a cached capacity-sorted invoker order.  The full-scan
+reference behaviour (``sparse=False``) replays bit-identically — the
+differential tests in ``tests/test_planner_fastpath.py`` pin it.
 """
 from __future__ import annotations
 
 import dataclasses
 import heapq
 import itertools
+import math
 import time as _walltime
 import zlib
 from collections import defaultdict, deque
@@ -128,6 +136,9 @@ class Invoker:
         self.device = DeviceModel(vgpus, hbm_per_vgpu_mb=hbm_per_vgpu_mb,
                                   shared_weights=shared_weights,
                                   overlap=overlap)
+        # optional sim hook observing new keep-alive expiries (the
+        # event-sparse emulator's expiry watermark)
+        self.note_expiry: Optional[Callable[[float], None]] = None
 
     @property
     def free_vgpu(self) -> float:
@@ -146,6 +157,8 @@ class Invoker:
 
     def add_warm(self, func: str, expiry: float, now: float = 0.0):
         self.device.add_warm(func, expiry, self.model_mb(func), now)
+        if self.note_expiry is not None:
+            self.note_expiry(expiry)
 
     def has_warm(self, func: str, now: float) -> bool:
         return self.device.has_warm(func, now)
@@ -194,6 +207,15 @@ class SchedulerPolicy:
              jobs: list[Job], now: float) -> list[Config]:
         raise NotImplementedError
 
+    def plan_signature(self, sim: "ClusterSim", app: Workflow, stage: str,
+                       jobs: list[Job], now: float):
+        """Certified identity token for the candidate list ``plan`` would
+        return right now, or None when the policy cannot certify one.
+        The event-sparse emulator compares tokens across events to prove
+        a blocked queue's retry futile without re-planning; returning
+        None (the default) simply forces the full re-plan."""
+        return None
+
     def on_arrival(self, sim: "ClusterSim", inst: AppInstance, now: float):
         pass
 
@@ -222,7 +244,8 @@ class ClusterSim:
                  hbm_per_vgpu_mb: Optional[float] = None,
                  shared_weights: bool = False,
                  overlap: bool = False,
-                 prefetch: bool = False):
+                 prefetch: bool = False,
+                 sparse: bool = True):
         self.apps = apps
         self.tables = tables
         self.profiles = profiles
@@ -237,6 +260,21 @@ class ClusterSim:
                              "(prefetch is a transfer-engine lever)")
         self.overlap = overlap
         self.prefetch_weights = prefetch
+        # event-sparse scheduling core: prewarm events unblock only the
+        # queues whose placement feasibility they could have changed
+        # (same function, keep-alive expiry crossed, HBM freed by a
+        # demotion overshoot), and placement fallbacks walk a cached
+        # capacity-sorted invoker order instead of re-scanning the fleet.
+        # ``sparse=False`` restores the full-scan reference behaviour;
+        # both replay bit-identically (tests/test_planner_fastpath.py) —
+        # the only observable difference is that provably-futile retry
+        # attempts stop being timed into ``sched_overheads_ms``.
+        self.sparse = sparse
+        self.sparse_skips = 0                 # provably-futile retries skipped
+        self._block_sig: dict[tuple[str, str], Any] = {}
+        self._min_expiry = math.inf           # earliest live keep-alive expiry
+        self._cap_order: list[int] = []
+        self._cap_dirty = True
         footprints = {n: getattr(p, "model_mb", 0.0)
                       for n, p in profiles.items()}
         self.invokers = [Invoker(i, vcpus, vgpus,
@@ -245,6 +283,8 @@ class ClusterSim:
                                  shared_weights=shared_weights,
                                  overlap=overlap)
                          for i in range(n_invokers)]
+        for inv in self.invokers:
+            inv.note_expiry = self._note_expiry
         self.noise_sigma = noise_sigma
         self.rng = np.random.default_rng(seed)
         self.count_overhead = count_overhead
@@ -265,6 +305,12 @@ class ClusterSim:
                           else NoPrewarm())
         self.autoscaler = autoscaler
         self.admission = admission    # callable(sim, inst) -> bool, or None
+        # futile-retry skipping is only sound when the congestion hook has
+        # no side effects: a policy overriding ``on_congestion`` (vertical
+        # resizing) may free capacity, so its retries must always run
+        from repro.serving.autoscaler import AutoscalerPolicy
+        self._congestion_noop = (type(autoscaler).on_congestion
+                                 is AutoscalerPolicy.on_congestion)
         self.autoscaler.seed_pools(self)
 
         # metrics
@@ -309,14 +355,74 @@ class ClusterSim:
                 self._blocked.clear()        # capacity changed: retry queues
             elif kind == "prewarm":
                 func, inv = payload
+                dev = self.invokers[inv].device
+                free_before = dev.free_hbm_mb
                 self.invokers[inv].add_warm(func, self.now + KEEPALIVE_MS,
                                             self.now)
-                self._blocked.clear()
+                if not self.sparse or dev.free_hbm_mb > free_before:
+                    # a demotion overshoot (or expiry GC on this device)
+                    # freed HBM: that is a capacity release, so every
+                    # blocked queue could now be placeable
+                    self._blocked.clear()
+                else:
+                    self._prewarm_unblock(func)
             elif kind == "autoscale":
                 self.autoscaler.on_tick(self, payload)
                 self._blocked.clear()
+            self._cap_dirty = True
             self._schedule_pass()
         return self
+
+    # ---- event-sparse bookkeeping ----------------------------------------
+    def _note_expiry(self, expiry: float) -> None:
+        if expiry < self._min_expiry:
+            self._min_expiry = expiry
+
+    def _refresh_min_expiry(self) -> None:
+        now = self.now
+        self._min_expiry = min(
+            (c.expiry for inv in self.invokers
+             for pool in inv.device.pools.values() for c in pool
+             if c.expiry >= now), default=math.inf)
+
+    def _prewarm_unblock(self, func: str) -> None:
+        """Selective unblocking after a ``prewarm`` event (sparse mode).
+
+        A warm-container add consumes HBM and touches no vCPUs or
+        compute slices, so the only queues whose placement feasibility
+        can have *improved* are (a) queues of the pre-warmed function
+        itself (its weights just became resident) and (b) every queue if
+        a keep-alive expiry was crossed since the last full retry (lazy
+        GC frees capacity as a function of time, not of events).  Every
+        other blocked queue is retried only if its candidate list could
+        have drifted with the clock — the scheduler's ``plan_signature``
+        certificate proves the common case (wide-slack budgets) did not,
+        and the retry the full-scan emulator would run is then futile:
+        it is accounted (recheck counter) but not executed."""
+        if self.now >= self._min_expiry:
+            self._blocked.clear()
+            self._refresh_min_expiry()
+            return
+        for key in list(self._blocked):
+            q = self.queues.get(key)
+            if not q:
+                continue        # empty queues take no part in a pass
+            app = self.apps[key[0]]
+            if app.func_of[key[1]] == func:
+                self._blocked.discard(key)
+                continue
+            rec = self._block_sig.get(key)
+            if rec is not None and self._congestion_noop:
+                forced = self.recheck.get(key, 0) >= RECHECK_LIMIT
+                sig = self.sched.plan_signature(self, app, key[1], list(q),
+                                                self.now)
+                if sig is not None and rec == (sig, forced):
+                    # same certified candidates, non-improving capacity:
+                    # mirror the futile retry's only lasting effect
+                    self.recheck[key] = self.recheck.get(key, 0) + 1
+                    self.sparse_skips += 1
+                    continue
+            self._blocked.discard(key)
 
     # ---- handlers --------------------------------------------------------
     def _on_arrival(self, inst: AppInstance):
@@ -334,9 +440,11 @@ class ClusterSim:
     def _on_complete(self, task: Task):
         inv = self.invokers[task.invoker]
         inv.free_vcpu += task.config.vcpu
+        self._cap_dirty = True
         # container returns to the keep-alive pool *hot*: weights stay in
         # HBM until expiry or demotion under memory pressure
         inv.device.stop(task.alloc_id, self.now + KEEPALIVE_MS)
+        self._note_expiry(self.now + KEEPALIVE_MS)
         self.slice_busy_ms += task.quota_slices * max(
             self.now - task.q_since, 0.0)
         self.running.pop(task.tid, None)
@@ -432,6 +540,11 @@ class ClusterSim:
             return True
         self.recheck[key] = self.recheck.get(key, 0) + 1
         self._blocked.add(key)
+        if self.sparse and self._congestion_noop:
+            # remember what this failed attempt planned against so later
+            # prewarm events can prove a retry futile without re-planning
+            sig = self.sched.plan_signature(self, app, stage, jobs, self.now)
+            self._block_sig[key] = None if sig is None else (sig, forced)
         return False
 
     # ---- placement ---------------------------------------------------------
@@ -449,9 +562,25 @@ class ClusterSim:
                          for j in jobs for p in preds]
             pred_invs = [p for p in pred_invs if p is not None]
             if pred_invs:
+                # kept verbatim from the pre-fast-path code: argsort's
+                # default sort is unstable past 16 elements, so any
+                # "equivalent" reimplementation can reorder count-tied
+                # invokers on large fleets and break bit-identical replay
                 vals, counts = np.unique(pred_invs, return_counts=True)
                 order.extend(int(v) for v in vals[np.argsort(-counts)])
         return order
+
+    def _capacity_order(self) -> list[int]:
+        """Invoker indices, most free accelerator (then CPU) first —
+        rebuilt lazily after capacity mutations so placement fallbacks
+        walk one pre-sorted list instead of re-scanning the fleet."""
+        if self._cap_dirty:
+            invs = self.invokers
+            self._cap_order = sorted(
+                range(len(invs)),
+                key=lambda i: (-invs[i].free_vgpu, -invs[i].free_vcpu, i))
+            self._cap_dirty = False
+        return self._cap_order
 
     def _place(self, app: Workflow, stage: str, jobs: list[Job],
                cfg: Config) -> Optional[int]:
@@ -489,6 +618,28 @@ class ClusterSim:
             return min(rest, key=lambda i: (
                 i.start_penalty_ms(func, cold_ms, self.now),
                 -i.free_vgpu, -i.free_vcpu, i.idx)).idx
+        if self.sparse:
+            # one walk over the capacity-sorted order replaces the two
+            # full warm/cold scans: the first *fitting* invoker in that
+            # order is exactly max((free_vgpu, free_vcpu)) over the
+            # fitting set (ties resolve to the lowest index, as max()
+            # did), and warm-over-cold preference is kept by remembering
+            # the first fit while continuing to look for a warm one.
+            # Locality-order invokers already failed fits above and are
+            # skipped without re-probing.
+            probed = set(order)
+            first_fit = None
+            for idx in self._capacity_order():
+                if idx in probed:
+                    continue
+                inv = self.invokers[idx]
+                if not inv.fits(cfg, func, self.now):
+                    continue
+                if inv.has_warm(func, self.now):
+                    return idx
+                if first_fit is None:
+                    first_fit = idx
+            return first_fit
         # other warm invokers
         warm = [i for i in self.invokers
                 if i.has_warm(func, self.now) and i.fits(cfg, func, self.now)
@@ -567,6 +718,7 @@ class ClusterSim:
         end = exec_start + exec_ms
 
         inv.free_vcpu -= cfg.vcpu
+        self._cap_dirty = True
         rate = cfg.vcpu * VCPU_PRICE_PER_H + cfg.vgpu * VGPU_PRICE_PER_H
         cost = rate * (charged + exec_ms) / 3.6e6
         self.total_cost += cost
@@ -605,6 +757,7 @@ class ClusterSim:
         old = task.quota_slices
         if not inv.device.resize(task.alloc_id, new_slices):
             return False
+        self._cap_dirty = True
         now = self.now
         fp = self.profiles[task.func]
         pivot = max(now, task.exec_start_ms)
@@ -659,6 +812,7 @@ class ClusterSim:
             "remote_transfers": self.remote_transfers,
             "config_misses": self.config_misses,
             "plan_uses": self.plan_uses,
+            "sparse_skips": self.sparse_skips,
             **self.gpu_summary(),
         }
 

@@ -37,6 +37,7 @@ the pipeline-conscious behaviour the paper's G_SLO distribution wants.
 """
 from __future__ import annotations
 
+import bisect
 import dataclasses
 import heapq
 import itertools
@@ -45,6 +46,12 @@ from typing import Optional, Sequence
 import numpy as np
 
 from repro.core.profiles import Config, ProfileTable
+
+# Bounded open list (vectorized engine): when the heap outgrows this, it is
+# compacted by dropping entries whose cost lower bound already exceeds the
+# current K-th upper bound — exactly the nodes the pop-time stale check
+# would discard anyway, so compaction never changes the result.
+OPEN_LIST_CAP = 32_768
 
 
 def _priced(tables: list[ProfileTable],
@@ -75,8 +82,29 @@ class SearchStats:
 
 def esg_1q(tables: list[ProfileTable], g_slo_ms: float, k: int = 5,
            stats: Optional[SearchStats] = None,
-           penalties_ms: Optional[Sequence[float]] = None) -> list[PathResult]:
-    """K cheapest SLO-feasible config paths over ``tables`` (one per stage)."""
+           penalties_ms: Optional[Sequence[float]] = None,
+           vectorized: bool = True) -> list[PathResult]:
+    """K cheapest SLO-feasible config paths over ``tables`` (one per stage).
+
+    ``vectorized=True`` (default) runs the array-based engine: per-stage
+    numpy pricing/blade arithmetic, index paths instead of Config tuples,
+    and a bounded open list.  It returns the same results as the legacy
+    per-config loop (``vectorized=False``) — the dual blades prune lazily
+    at pop instead of eagerly at push, which never changes which paths
+    complete first (tests/test_planner_fastpath.py runs both engines over
+    randomized tables).  ``SearchStats`` counters keep the same meaning
+    but not the same values across engines (the vectorized engine pushes
+    nodes the sequential loop pruned in-flight and prunes them at pop)."""
+    if vectorized:
+        return _esg_1q_vec(tables, g_slo_ms, k, stats, penalties_ms)
+    return _esg_1q_legacy(tables, g_slo_ms, k, stats, penalties_ms)
+
+
+def _esg_1q_legacy(tables: list[ProfileTable], g_slo_ms: float, k: int = 5,
+                   stats: Optional[SearchStats] = None,
+                   penalties_ms: Optional[Sequence[float]] = None
+                   ) -> list[PathResult]:
+    """Reference per-config search loop (the pre-fast-path implementation)."""
     tables = _priced(tables, penalties_ms)
     n = len(tables)
     if n == 0:
@@ -106,9 +134,11 @@ def esg_1q(tables: list[ProfileTable], g_slo_ms: float, k: int = 5,
     heap: list[tuple] = [(min_c[0], min_t[0], next(tie), 0, 0.0, 0.0, ())]
 
     def note_upper(bound: float):
+        # min_rsc stays sorted, so displacing the worst entry is a pop +
+        # O(log k) insort, not a full re-sort per insertion
         if bound < min_rsc[-1]:
-            min_rsc[-1] = bound
-            min_rsc.sort()
+            min_rsc.pop()
+            bisect.insort(min_rsc, bound)
 
     note_upper(float(fast_c[0]))
 
@@ -142,6 +172,133 @@ def esg_1q(tables: list[ProfileTable], g_slo_ms: float, k: int = 5,
                                   path + (tbl.configs[j],)))
             if stats:
                 stats.nodes_pushed += 1
+    return results
+
+
+def _esg_1q_vec(tables: list[ProfileTable], g_slo_ms: float, k: int = 5,
+                stats: Optional[SearchStats] = None,
+                penalties_ms: Optional[Sequence[float]] = None
+                ) -> list[PathResult]:
+    """Vectorized ESG_1Q engine.
+
+    Same search, three structural changes:
+      * stage tables are consumed as (times, job_costs) arrays with the
+        penalty priced in via ``ProfileTable.priced_arrays`` — no Config
+        objects or intermediate tables are built during the search;
+      * one expansion evaluates both blades over the whole config list at
+        once: the time blade is a prefix length (config lists are sorted
+        by latency, so feasibility is monotone), the cost blade a boolean
+        mask against the current K-th upper bound, and the K best upper
+        bounds fold in via one partition instead of per-config insorts;
+      * paths are tuples of config *indices* (materialized into Config
+        tuples only for completed results) and the open list is bounded:
+        past ``OPEN_LIST_CAP`` it is compacted by the same stale test the
+        pop loop applies.
+
+    The eager per-config bound-tightening of the sequential loop becomes
+    lazy (a whole expansion prunes against the bound as of its start);
+    nodes the legacy loop never pushed are pushed here and discarded by
+    the pop-time stale check, which cannot change the completed-path
+    order because the heap keys (cost lower bound, time lower bound) are
+    computed with the same float arithmetic.
+    """
+    if penalties_ms is not None and len(penalties_ms) != len(tables):
+        raise ValueError(
+            f"penalties_ms has {len(penalties_ms)} entries "
+            f"for {len(tables)} stages")
+    n = len(tables)
+    if n == 0:
+        return []
+    times: list[np.ndarray] = []
+    costs: list[np.ndarray] = []
+    for i, t in enumerate(tables):
+        ts, cs = t.priced_arrays(
+            0.0 if penalties_ms is None else penalties_ms[i])
+        times.append(ts)
+        costs.append(cs)
+    # suffix bounds, accumulated in the same (reverse) order as the legacy
+    # loop so the float sums are bitwise identical
+    min_t = np.zeros(n + 1)
+    min_c = np.zeros(n + 1)
+    fast_c = np.zeros(n + 1)
+    for i in range(n - 1, -1, -1):
+        min_t[i] = min_t[i + 1] + float(times[i][0])
+        min_c[i] = min_c[i + 1] + float(costs[i].min())
+        fast_c[i] = fast_c[i + 1] + float(costs[i][0])
+
+    def materialize(path: tuple[int, ...]) -> tuple[Config, ...]:
+        return tuple(tables[s].configs[j] for s, j in enumerate(path))
+
+    if min_t[0] >= g_slo_ms:
+        return [PathResult(tuple(t.configs[0] for t in tables),
+                           float(min_t[0]), float(fast_c[0]))]
+
+    min_rsc = np.full(k, np.inf)
+    results: list[PathResult] = []
+    tie = itertools.count()
+    heap: list[tuple] = [(float(min_c[0]), float(min_t[0]), next(tie),
+                          0, 0.0, 0.0, ())]
+    min_rsc[-1] = fast_c[0]
+    min_rsc.sort()
+    compact_floor = OPEN_LIST_CAP
+
+    while heap and len(results) < k:
+        f, _, _, i, g_time, g_cost, path = heapq.heappop(heap)
+        if stats:
+            stats.nodes_expanded += 1
+        if i == n:
+            results.append(PathResult(materialize(path), g_time, g_cost))
+            continue
+        bound = min_rsc[-1]
+        if g_cost + min_c[i] > bound:        # stale node (bound tightened)
+            if stats:
+                stats.pruned_cost += 1
+            continue
+        m_next = min_t[i + 1]
+        t_new = g_time + times[i]
+        f_time = t_new + m_next
+        # time blade: sorted by latency => feasibility is a prefix
+        feas = f_time < g_slo_ms
+        cut = int(feas.sum())
+        if cut < len(feas):
+            if stats:
+                stats.pruned_time += 1
+            if cut == 0:
+                continue
+        c_new = g_cost + costs[i][:cut]
+        rsc_low = c_new + min_c[i + 1]
+        keep = rsc_low <= bound              # cost blade (strict > prunes)
+        kept = int(keep.sum())
+        if stats:
+            stats.pruned_cost += cut - kept
+        if not kept:
+            continue
+        c_keep = c_new[keep]
+        # fold the survivors' achievable upper bounds (rscFastest) into
+        # the K best seen so far in one partition
+        merged = np.concatenate((min_rsc, c_keep + fast_c[i + 1]))
+        if merged.size > k:
+            merged = np.partition(merged, k - 1)[:k]
+        merged.sort()
+        min_rsc = merged
+        nxt = i + 1
+        for j, rl, ft, tn, cn in zip(
+                np.flatnonzero(keep).tolist(), rsc_low[keep].tolist(),
+                f_time[:cut][keep].tolist(), t_new[:cut][keep].tolist(),
+                c_keep.tolist()):
+            heapq.heappush(heap, (rl, ft, next(tie), nxt, tn, cn,
+                                  path + (j,)))
+        if stats:
+            stats.nodes_pushed += kept
+        if len(heap) > compact_floor:
+            bound = min_rsc[-1]
+            slim = [nd for nd in heap if nd[0] <= bound]
+            if len(slim) < len(heap):
+                heap = slim
+                heapq.heapify(heap)
+            # if nothing was prunable, raise the floor so compaction
+            # attempts stay amortized O(1) per push
+            compact_floor = max(OPEN_LIST_CAP, 2 * len(heap))
     return results
 
 

@@ -19,6 +19,7 @@ The latency model satisfies the paper's qualitative structure:
 from __future__ import annotations
 
 import dataclasses
+import functools
 import itertools
 from typing import Iterable, Optional
 
@@ -165,6 +166,37 @@ class ProfileTable:
                             [self.configs[i] for i in keep],
                             self.times[keep], self.job_costs[keep])
 
+    # -- cached per-config arrays (computed once; the table is immutable
+    # after build, so these never go stale) ---------------------------------
+    @functools.cached_property
+    def rates(self) -> np.ndarray:
+        """$-rate per config, aligned with ``times``/``job_costs``."""
+        return np.array([c.vcpu * VCPU_PRICE_PER_H +
+                         c.vgpu * VGPU_PRICE_PER_H for c in self.configs])
+
+    @functools.cached_property
+    def batch_sizes(self) -> np.ndarray:
+        """Per-config batch size as floats, aligned with ``configs``."""
+        return np.array([c.batch for c in self.configs], dtype=float)
+
+    @functools.cached_property
+    def batch_lattice(self) -> tuple[int, ...]:
+        """Distinct batch sizes present, ascending — ``restrict_batch(n)``
+        yields the same table for every ``n`` inside one lattice step, so
+        callers can quantize batch caps to these buckets losslessly."""
+        return tuple(sorted({c.batch for c in self.configs}))
+
+    def priced_arrays(self, penalty_ms: float = 0.0
+                      ) -> tuple[np.ndarray, np.ndarray]:
+        """(times, job_costs) with a start penalty priced in — the array
+        form of ``with_penalty`` (no per-config Python objects, no new
+        table).  Zero penalty returns the table's own arrays."""
+        if penalty_ms <= 0.0:
+            return self.times, self.job_costs
+        return (self.times + penalty_ms,
+                self.job_costs + self.rates * penalty_ms / 3.6e6
+                / self.batch_sizes)
+
     def with_penalty(self, penalty_ms: float) -> "ProfileTable":
         """Price a per-stage start penalty (a Torpor-style weight swap-in
         the placement is predicted to pay) into both A* blades: every
@@ -174,13 +206,8 @@ class ProfileTable:
         and true costs, not profile-only ones."""
         if penalty_ms <= 0.0:
             return self
-        rates = np.array([c.vcpu * VCPU_PRICE_PER_H + c.vgpu * VGPU_PRICE_PER_H
-                          for c in self.configs])
-        batches = np.array([c.batch for c in self.configs], dtype=float)
-        return ProfileTable(self.fn, list(self.configs),
-                            self.times + penalty_ms,
-                            self.job_costs +
-                            rates * penalty_ms / 3.6e6 / batches)
+        times, costs = self.priced_arrays(penalty_ms)
+        return ProfileTable(self.fn, list(self.configs), times, costs)
 
     @property
     def min_time(self) -> float:

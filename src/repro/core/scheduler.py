@@ -14,6 +14,12 @@ Per queue-scheduling call (paper Fig 2(d)):
 
 ESG re-plans at *every* stage dispatch — the paper's optimality-guided
 adaptive behaviour (vs Orion/Aquatope's static whole-workflow plans).
+Those searches repeat heavily, so they run through a memoized
+dominator-budget plan cache by default (``plan_cache=True``; see
+``repro.core.plancache``) and the vectorized ESG_1Q engine
+(``vectorized=True``) — both produce bit-identical plans to the legacy
+per-call search, proven differentially in
+``tests/test_planner_fastpath.py``.
 
 ``placement="memory"`` (weight-locality-aware mode, off by default) does
 two things: the emulator's placement ranks fallback invokers by the
@@ -30,13 +36,14 @@ memory-blind for a fair fig6/fig7 contrast.
 """
 from __future__ import annotations
 
-import dataclasses
+import bisect
 from typing import Optional
 
 import numpy as np
 
 from repro.core.astar import esg_1q
 from repro.core.dominator import ScheduleGroup, distribute_slo
+from repro.core.plancache import PlanCache
 from repro.core.profiles import Config, ProfileTable
 from repro.core.workflows import Workflow
 from repro.cluster.emulator import ClusterSim, Job, SchedulerPolicy
@@ -51,7 +58,8 @@ class ESGScheduler(SchedulerPolicy):
                  tables: dict[str, ProfileTable],
                  k: int = 5, group_size: int = 3,
                  pareto: bool = False, risk_sigma: float = 0.0,
-                 placement: str = "locality"):
+                 placement: str = "locality",
+                 plan_cache: bool = True, vectorized: bool = True):
         if placement not in ("locality", "memory"):
             raise ValueError(f"ESG placement must be 'locality' or "
                              f"'memory', got {placement!r}")
@@ -59,6 +67,9 @@ class ESGScheduler(SchedulerPolicy):
         self.tables = tables
         self.k = k
         self.pareto = pareto
+        self.vectorized = vectorized
+        self.cache = PlanCache(k=k, vectorized=vectorized) \
+            if plan_cache else None
         # plan against P95-ish estimates when the config lattice is coarse
         # (TPU-zoo serving: chip counts step latency ~2x, so mean-based
         # plans ride the budget edge and noise tips them over)
@@ -72,6 +83,12 @@ class ESGScheduler(SchedulerPolicy):
             name: {s: i for i, s in enumerate(app.stages)}
             for name, app in apps.items()
         }
+        # per-(app, stage) planning context — the group suffix, its tables
+        # and the budget constants are pure functions of the constructor
+        # inputs, so they are computed once instead of per dispatch
+        self._ctx: dict[tuple[str, str], tuple] = {}
+        self._restricted: dict[tuple[str, str, int], ProfileTable] = {}
+        self._cheapest: dict[tuple[str, int], Config] = {}
 
     # -- quota of the remaining pipeline, for G_SLO normalisation ----------
     def _norm_quota(self, app: Workflow, group: ScheduleGroup,
@@ -122,55 +139,106 @@ class ESGScheduler(SchedulerPolicy):
             return swap_in_ms(sim.invokers[0].model_mb(func))
         return 0.0
 
+    # -- per-(app, stage) planning context ---------------------------------
+    def _stage_ctx(self, app: Workflow, stage: str) -> tuple:
+        key = (app.name, stage)
+        ctx = self._ctx.get(key)
+        if ctx is None:
+            group = self.groups[app.name][stage]
+            # stages of the group from the current one onward
+            idx = group.stages.index(stage)
+            stages = group.stages[idx:]
+            funcs = [app.func_of[s] for s in stages]
+            base = [self.tables[f] for f in funcs]
+            if self.pareto:
+                base = [t.pareto() for t in base]
+            # headroom for non-exec latency the profiles don't cover: data
+            # transfer + dispatch/scheduling overhead per remaining stage
+            # (the Controller "estimates the times with performance
+            # profiles" — §3.3; transfer estimates are part of those)
+            margin = sum(self.tables[f].fn.input_mb * 8.0 + 25.0
+                         for f in funcs)
+            quota = self._norm_quota(app, group, stage)
+            ctx = (funcs, base, margin, quota)
+            self._ctx[key] = ctx
+        return ctx
+
+    @staticmethod
+    def _bucket(table: ProfileTable, n: int) -> int:
+        """Quantize a batch cap to the table's lattice: restrict_batch is
+        constant inside one lattice step, so the bucket is lossless."""
+        lat = table.batch_lattice
+        i = bisect.bisect_right(lat, n)
+        return lat[i - 1] if i else 0
+
+    def _prepared(self, app_name: str, stage: str, base: list[ProfileTable],
+                  bucket: int) -> list[ProfileTable]:
+        key = (app_name, stage, bucket)
+        first = self._restricted.get(key)
+        if first is None:
+            first = base[0].restrict_batch(bucket)
+            self._restricted[key] = first
+        return [first] + base[1:]
+
+    def _cheapest_config(self, func: str, n_jobs: int) -> Config:
+        """Globally cost-optimal config of ``func`` at batch cap
+        ``n_jobs`` (the sunk-deadline serve-at-min-cost path)."""
+        bucket = self._bucket(self.tables[func], max(n_jobs, 1))
+        cfg = self._cheapest.get((func, bucket))
+        if cfg is None:
+            tbl = self.tables[func].restrict_batch(bucket)
+            cfg = tbl.configs[int(np.argmin(tbl.job_costs))]
+            self._cheapest[(func, bucket)] = cfg
+        return cfg
+
+    def _penalties(self, sim: ClusterSim, funcs: list[str],
+                   tables: list[ProfileTable]) -> Optional[list[float]]:
+        """Memory-aware mode: predicted weight-swap penalty per remaining
+        stage, residual-discounted under the overlapped swap pipeline."""
+        if self.placement != "memory" or not getattr(sim, "invokers", None):
+            return None
+        penalties = [self._predicted_swap_ms(sim, f) for f in funcs]
+        if getattr(sim, "overlap", False) and \
+                getattr(sim, "prefetch_weights", False):
+            # overlapped swap pipeline with predictive prefetch:
+            # stage j's swap-in is enqueued when stage j-1
+            # dispatches, so at least stage j-1's fastest execution
+            # hides it — price only the residual, which shrinks
+            # with pipeline depth (stage 0 pays what is left *now*)
+            for j in range(1, len(penalties)):
+                penalties[j] = max(
+                    penalties[j] - tables[j - 1].min_time, 0.0)
+        if not any(penalties):
+            return None
+        return penalties
+
     def plan(self, sim: ClusterSim, app: Workflow, stage: str,
              jobs: list[Job], now: float) -> list[Config]:
-        group = self.groups[app.name][stage]
-        # stages of the group from the current one onward
-        idx = group.stages.index(stage)
-        stages = group.stages[idx:]
-        funcs = [app.func_of[s] for s in stages]
-        tables = [self.tables[f] for f in funcs]
-        if self.pareto:
-            tables = [t.pareto() for t in tables]
-        tables[0] = tables[0].restrict_batch(max(len(jobs), 1))
-
+        funcs, base, margin, quota = self._stage_ctx(app, stage)
         w = max(now - j.inst.arrival_ms for j in jobs)
         slo = max(j.inst.slo_ms for j in jobs)
         if w >= slo:
             # deadline already lost: the SLO miss is sunk — serve at the
             # globally cost-optimal config (paper's "ensure progress";
             # Config(1,1,1) would pin a 76B model to one chip for minutes)
-            tbl = self.tables[funcs[0]].restrict_batch(max(len(jobs), 1))
-            i = int(np.argmin(tbl.job_costs))
-            return [tbl.configs[i]]
+            return [self._cheapest_config(funcs[0], len(jobs))]
         remaining = max(slo - w, 1.0)
-        g_slo = remaining * self._norm_quota(app, group, stage)
-        # headroom for non-exec latency the profiles don't cover: data
-        # transfer + dispatch/scheduling overhead per remaining stage (the
-        # Controller "estimates the times with performance profiles" — §3.3;
-        # transfer estimates are part of those profiles)
-        margin = sum(self.tables[f].fn.input_mb * 8.0 + 25.0 for f in funcs)
+        g_slo = remaining * quota
         g_slo = max((g_slo - margin) / self.time_inflation, 1.0)
 
+        bucket = self._bucket(base[0], max(len(jobs), 1))
+        tables = self._prepared(app.name, stage, base, bucket)
         # memory-aware mode: price each remaining stage's predicted
         # weight-swap penalty into the search so the configPQ is ranked
         # by true (swap-inclusive) latency and cost
-        penalties = None
-        if self.placement == "memory" and getattr(sim, "invokers", None):
-            penalties = [self._predicted_swap_ms(sim, f) for f in funcs]
-            if getattr(sim, "overlap", False) and \
-                    getattr(sim, "prefetch_weights", False):
-                # overlapped swap pipeline with predictive prefetch:
-                # stage j's swap-in is enqueued when stage j-1
-                # dispatches, so at least stage j-1's fastest execution
-                # hides it — price only the residual, which shrinks
-                # with pipeline depth (stage 0 pays what is left *now*)
-                for j in range(1, len(penalties)):
-                    penalties[j] = max(
-                        penalties[j] - tables[j - 1].min_time, 0.0)
-            if not any(penalties):
-                penalties = None
-        results = esg_1q(tables, g_slo, k=self.k, penalties_ms=penalties)
+        penalties = self._penalties(sim, funcs, tables)
+        if self.cache is not None:
+            pen_key = tuple(penalties) if penalties is not None else None
+            results = self.cache.lookup(
+                (app.name, stage, bucket, pen_key), g_slo, tables, penalties)
+        else:
+            results = esg_1q(tables, g_slo, k=self.k, penalties_ms=penalties,
+                             vectorized=self.vectorized)
         out = [r.configs[0] for r in results]
         if len(out) == 1 and results[0].est_time_ms >= g_slo:
             # infeasible target: best-effort fastest path, with cheaper
@@ -178,3 +246,29 @@ class ESGScheduler(SchedulerPolicy):
             out.append(Config(min(len(jobs), 8), 2, 2))
             out.append(Config(1, 1, 1))
         return out
+
+    # -- event-sparse emulator hook ----------------------------------------
+    def plan_signature(self, sim: ClusterSim, app: Workflow, stage: str,
+                       jobs: list[Job], now: float):
+        """Certified identity token for the candidate list ``plan`` would
+        return right now, or None when no certificate is available.
+
+        Only the plan cache's budget-free regime is certifiable (the
+        result is provably independent of the exact G_SLO there); the
+        sunk-deadline path, the floor/exact regimes and unbuilt cache
+        entries all return None, forcing the emulator to re-plan."""
+        if self.cache is None or not jobs:
+            return None
+        funcs, base, margin, quota = self._stage_ctx(app, stage)
+        w = max(now - j.inst.arrival_ms for j in jobs)
+        slo = max(j.inst.slo_ms for j in jobs)
+        if w >= slo:
+            return None
+        remaining = max(slo - w, 1.0)
+        g_slo = max((remaining * quota - margin) / self.time_inflation, 1.0)
+        bucket = self._bucket(base[0], max(len(jobs), 1))
+        tables = self._prepared(app.name, stage, base, bucket)
+        penalties = self._penalties(sim, funcs, tables)
+        pen_key = tuple(penalties) if penalties is not None else None
+        return self.cache.budget_free_token(
+            (app.name, stage, bucket, pen_key), g_slo)

@@ -29,7 +29,7 @@ from __future__ import annotations
 import dataclasses
 import math
 import zlib
-from typing import Callable, Optional, Sequence
+from typing import Callable, Iterable, Optional, Sequence
 
 import numpy as np
 
@@ -212,10 +212,11 @@ class TraceReplayScenario(Scenario):
     for injecting real Azure/production traces instead of synthetic
     processes.
 
-    Sources (first match wins): ``rows`` (list of ``(t_ms, app)``),
-    ``csv_path`` (CSV with a ``t_ms,app`` header, as shipped under
-    ``benchmarks/traces/``), else a small built-in bursty sample so the
-    scenario is usable straight from the catalogue.
+    Sources (first match wins): ``rows`` (any iterable of ``(t_ms, app)``
+    pairs, consumed once — generators welcome), ``csv_path`` (CSV with a
+    ``t_ms,app`` header, as shipped under ``benchmarks/traces/``,
+    streamed lazily via ``iter_csv``), else a small built-in bursty
+    sample so the scenario is usable straight from the catalogue.
 
     Semantics:
       * rows are sorted by time; ``time_scale`` stretches/compresses the
@@ -233,7 +234,7 @@ class TraceReplayScenario(Scenario):
     name = "trace-replay"
 
     def __init__(self, csv_path: Optional[str] = None,
-                 rows: Optional[Sequence[tuple[float, str]]] = None,
+                 rows: Optional[Iterable[tuple[float, str]]] = None,
                  time_scale: float = 1.0, speedup: float = 1.0, **kw):
         super().__init__(**kw)
         if not speedup > 0.0:          # also rejects NaN
@@ -241,25 +242,31 @@ class TraceReplayScenario(Scenario):
                 f"trace-replay: speedup must be > 0 (it divides the "
                 f"trace clock; 10.0 replays 10x faster), got {speedup!r}")
         if rows is None and csv_path is not None:
-            rows = self.read_csv(csv_path)
+            rows = self.iter_csv(csv_path)
         if rows is None:
             rows = DEFAULT_TRACE_ROWS
-        if not rows:
-            raise ValueError("trace-replay: empty trace")
+        # ``rows`` may be any iterable (including the lazy CSV reader):
+        # it is consumed exactly once, straight into the sorted trace —
+        # the only materialization an hour-long Azure trace ever gets
         self.rows = sorted((float(t), str(app)) for t, app in rows)
+        if not self.rows:
+            raise ValueError("trace-replay: empty trace")
         self.speedup = speedup
         self.time_scale = time_scale / speedup
 
     @staticmethod
-    def read_csv(path: str) -> list[tuple[float, str]]:
-        """Parse a ``t_ms,app`` CSV (header required, extra cols ignored).
+    def iter_csv(path: str):
+        """Stream a ``t_ms,app`` CSV (header required, extra cols
+        ignored), yielding one ``(t_ms, app)`` tuple per row.
 
-        Blank and whitespace-only rows — the trailing newline junk real
-        trace exports ship with — are skipped; a row missing either
-        value, or with an unparsable ``t_ms``, raises a ``ValueError``
-        naming the file and line instead of a bare ``KeyError``."""
+        Rows are parsed lazily — hour-long Azure traces never hold the
+        file or a per-row dict list in memory beyond the single tuple
+        list the caller builds.  Blank and whitespace-only rows — the
+        trailing newline junk real trace exports ship with — are
+        skipped; a row missing either value, or with an unparsable
+        ``t_ms``, raises a ``ValueError`` naming the file and line
+        instead of a bare ``KeyError``."""
         import csv as _csv
-        rows: list[tuple[float, str]] = []
         with open(path, newline="") as f:
             reader = _csv.DictReader(f)
             if reader.fieldnames is None or \
@@ -283,8 +290,12 @@ class TraceReplayScenario(Scenario):
                     raise ValueError(
                         f"{path} line {reader.line_num}: t_ms must be a "
                         f"number, got {t_raw!r}") from None
-                rows.append((t, app.strip()))
-        return rows
+                yield (t, app.strip())
+
+    @staticmethod
+    def read_csv(path: str) -> list[tuple[float, str]]:
+        """Materialized form of ``iter_csv`` (back-compat helper)."""
+        return list(TraceReplayScenario.iter_csv(path))
 
     def arrivals(self, app_names: Sequence[str], n: int,
                  seed: int = 0) -> list[Arrival]:

@@ -1,0 +1,369 @@
+"""Differential/property harness for the PR-5 planner fast path.
+
+Locks the three optimizations — the memoized dominator-budget plan
+cache, the vectorized ESG_1Q engine and the event-sparse emulator core
+— against the pre-optimization reference they replace:
+
+  * **engine parity** — vectorized vs legacy ``esg_1q`` on the paper
+    tables and on randomized profile tables (random penalties, random
+    budgets, every budget regime): identical ``PathResult`` lists,
+    bit for bit;
+  * **plan-cache soundness** — ``PlanCache.lookup`` equals a fresh
+    search across a budget sweep spanning the floor, exact and
+    budget-free regimes, and the certified regimes actually hit;
+  * **differential replay** — every serving scenario runs with the fast
+    path on (cache + vectorized engine + sparse emulator, the defaults)
+    vs entirely off: schedules, SLO hit rates and ``gpu_summary()``
+    counters must be bit-identical — including congested/finite-HBM
+    configurations where the sparse emulator provably skips futile
+    retries (``sparse_skips > 0``), and memory-aware + overlapped-swap
+    configurations where penalty signatures join the cache key;
+  * **satellites** — streaming ``TraceReplayScenario.iter_csv``
+    (generator rows, blank-row skip, ValueError naming file+line) and
+    the bisect-based ``note_upper``.
+"""
+import pathlib
+
+import numpy as np
+import pytest
+
+from repro.cluster.emulator import ClusterSim
+from repro.core.astar import (SearchStats, _esg_1q_legacy, brute_force,
+                              esg_1q)
+from repro.core.plancache import PlanCache
+from repro.core.profiles import (PAPER_FUNCTIONS, FunctionProfile,
+                                 ProfileTable)
+from repro.core.scheduler import ESGScheduler
+from repro.core.workflows import PAPER_APPS
+from repro.serving import Gateway, get_autoscaler, get_scenario
+from repro.serving.traces import SCENARIOS, TraceReplayScenario
+
+APPS = list(PAPER_APPS)
+HERE = pathlib.Path(__file__).resolve().parent
+N_REQ = 24
+
+
+@pytest.fixture(scope="module")
+def tables():
+    return {n: ProfileTable.build(p) for n, p in PAPER_FUNCTIONS.items()}
+
+
+def flat(results):
+    return [(r.configs, r.est_time_ms, r.est_job_cost) for r in results]
+
+
+# ---------------------------------------------------------------------------
+# engine parity: vectorized vs legacy ESG_1Q
+# ---------------------------------------------------------------------------
+def test_vectorized_matches_legacy_on_paper_tables(tables):
+    tbls = [tables[f] for f in
+            ("super_resolution", "segmentation", "classification")]
+    for g in (1e-3, 200.0, 800.0, 1500.0, 3000.0, 12000.0, 1e7):
+        for k in (1, 3, 5, 8):
+            assert flat(esg_1q(tbls, g, k=k)) == \
+                flat(_esg_1q_legacy(tbls, g, k=k)), (g, k)
+
+
+def test_vectorized_matches_legacy_with_penalties(tables):
+    tbls = [tables[f] for f in ("deblur", "depth")]
+    pen = [700.0, 0.0]
+    for g in (500.0, 2500.0, 9000.0):
+        assert flat(esg_1q(tbls, g, k=5, penalties_ms=pen)) == \
+            flat(_esg_1q_legacy(tbls, g, k=5, penalties_ms=pen))
+    with pytest.raises(ValueError):
+        esg_1q(tbls, 1000.0, penalties_ms=[1.0])
+    with pytest.raises(ValueError):
+        _esg_1q_legacy(tbls, 1000.0, penalties_ms=[1.0])
+
+
+def test_vectorized_matches_legacy_randomized():
+    rng = np.random.default_rng(7)
+    for trial in range(150):
+        n = int(rng.integers(1, 4))
+        tbls = []
+        for s in range(n):
+            fn = FunctionProfile(f"r{trial}_{s}",
+                                 float(rng.uniform(20, 2000)), 1000.0, 1.0,
+                                 cpu_frac=float(rng.uniform(0.05, 0.5)))
+            tbls.append(ProfileTable.build(
+                fn, batches=(1, 2, 4, 8), vcpus=(1, 2), vgpus=(1, 2, 4)))
+        if rng.random() < 0.4:
+            tbls = [t.pareto() for t in tbls]
+        if rng.random() < 0.4:
+            tbls[0] = tbls[0].restrict_batch(int(rng.integers(1, 8)))
+        pen = [float(rng.uniform(0, 300)) for _ in tbls] \
+            if rng.random() < 0.5 else None
+        lo = sum(float(t.times[0]) for t in tbls)
+        g = float(rng.uniform(0.2 * lo, 10 * lo))
+        k = int(rng.integers(1, 7))
+        a = esg_1q(tbls, g, k=k, penalties_ms=pen)
+        b = _esg_1q_legacy(tbls, g, k=k, penalties_ms=pen)
+        assert flat(a) == flat(b), (trial, g, k)
+        # brute-force oracle only applies when the budget is feasible
+        # (the search returns a best-effort fastest path otherwise)
+        bf = brute_force(tbls, g, k=k, penalties_ms=pen)
+        if bf:
+            assert flat(a) == flat(bf), (trial, g, k)
+
+
+def test_vectorized_stats_still_prune(tables):
+    tbls = [tables[f] for f in ("super_resolution", "segmentation")]
+    stats = SearchStats()
+    esg_1q(tbls, 2000.0, k=5, stats=stats)
+    n_total = len(tbls[0].configs) * len(tbls[1].configs)
+    assert stats.nodes_expanded > 0
+    assert stats.nodes_pushed < n_total
+    assert stats.pruned_time + stats.pruned_cost > 0
+
+
+def test_with_penalty_array_form_matches_table_form(tables):
+    t = tables["segmentation"]
+    pt = t.with_penalty(123.4)
+    ts, cs = t.priced_arrays(123.4)
+    assert np.array_equal(pt.times, ts) and np.array_equal(pt.job_costs, cs)
+    assert t.priced_arrays(0.0) == (t.times, t.job_costs)
+    assert t.with_penalty(0.0) is t
+
+
+def test_batch_lattice_buckets_are_lossless(tables):
+    t = tables["deblur"]
+    lat = t.batch_lattice
+    for n in (1, 2, 3, 5, 8, 11, 129):
+        i = np.searchsorted(lat, n, side="right")
+        bucket = lat[i - 1] if i else 0
+        a, b = t.restrict_batch(n), t.restrict_batch(bucket)
+        assert a.configs == b.configs
+
+
+# ---------------------------------------------------------------------------
+# plan cache: soundness across the three budget regimes
+# ---------------------------------------------------------------------------
+def test_plan_cache_equals_fresh_search_across_budgets(tables):
+    tbls = [tables[f] for f in ("super_resolution", "segmentation")]
+    cache = PlanCache(k=5)
+    t_min = sum(float(t.times[0]) for t in tbls)
+    budgets = [0.5 * t_min, t_min, t_min * 1.01, t_min * 1.5, t_min * 2,
+               t_min * 5, t_min * 50, 1e9]
+    for g in budgets + budgets:          # second lap: pure cache hits
+        assert flat(cache.lookup("key", g, tbls)) == \
+            flat(esg_1q(tbls, g, k=5)), g
+    s = cache.stats
+    assert s.builds == 1
+    assert s.hits_floor > 0 and s.hits_budget_free > 0 and s.hits_exact > 0
+    assert s.hits + s.misses == 2 * len(budgets)
+
+
+def test_plan_cache_penalties_separate_entries(tables):
+    tbls = [tables[f] for f in ("deblur",)]
+    cache = PlanCache(k=3)
+    a = cache.lookup(("k", None), 1e6, tbls, None)
+    b = cache.lookup(("k", (500.0,)), 1e6, tbls, [500.0])
+    assert flat(b) == flat(esg_1q(tbls, 1e6, k=3, penalties_ms=[500.0]))
+    assert flat(a) != flat(b)            # the penalty re-prices the paths
+    assert cache.stats.builds == 2
+
+
+def test_plan_cache_budget_free_token(tables):
+    tbls = [tables[f] for f in ("classification",)]
+    cache = PlanCache(k=5)
+    assert cache.budget_free_token("k", 1e9) is None     # entry not built
+    cache.lookup("k", 1e9, tbls)
+    entry = cache.peek("k")
+    assert cache.budget_free_token("k", entry.t_max * 1.01) is not None
+    assert cache.budget_free_token("k", entry.t_max) is None
+    assert cache.budget_free_token("k", 0.5 * entry.t_min) is None
+
+
+def test_plan_cache_eviction_bounds_memory(tables):
+    tbls = [tables["depth"]]
+    cache = PlanCache(k=2, max_entries=4, max_exact=8)
+    for i in range(10):
+        cache.lookup(f"k{i}", 1e9, tbls)
+    assert len(cache._entries) <= 4 and cache.stats.evictions >= 6
+    e_key = next(iter(cache._entries))
+    entry = cache._entries[e_key]
+    lo, hi = entry.t_min, entry.t_max
+    for g in np.linspace(lo * 1.001, hi, 20):
+        cache.lookup(e_key, float(g), tbls)
+    assert len(entry.exact) <= 8
+
+
+def test_scheduler_plan_cache_off_matches_on(tables):
+    """Live plan() calls with cache on vs off, same inputs."""
+    on = ESGScheduler(PAPER_APPS, tables)
+    off = ESGScheduler(PAPER_APPS, tables, plan_cache=False,
+                       vectorized=False)
+    sim = ClusterSim(PAPER_APPS, tables, PAPER_FUNCTIONS, on, seed=0)
+
+    class J:
+        def __init__(self, arrival, slo):
+            self.inst = type("I", (), {"arrival_ms": arrival,
+                                       "slo_ms": slo})()
+    rng = np.random.default_rng(3)
+    for app in PAPER_APPS.values():
+        for stage in app.stages:
+            for _ in range(6):
+                now = float(rng.uniform(0, 5000))
+                jobs = [J(now - float(rng.uniform(0, 800)),
+                          float(rng.uniform(500, 20000)))
+                        for _ in range(int(rng.integers(1, 6)))]
+                assert on.plan(sim, app, stage, jobs, now) == \
+                    off.plan(sim, app, stage, jobs, now), (app.name, stage)
+    assert on.cache.stats.hits > 0
+
+
+# ---------------------------------------------------------------------------
+# differential replay: fast path vs full-scan/legacy, every scenario
+# ---------------------------------------------------------------------------
+def _run(tables, scenario, n=N_REQ, seed=0, slo_mult=1.0, fast=True,
+         placement="locality", autoscaler="ewma", shed=True, **sim_kw):
+    sched = ESGScheduler(PAPER_APPS, tables, placement=placement,
+                         plan_cache=fast, vectorized=fast)
+    sim = ClusterSim(PAPER_APPS, tables, PAPER_FUNCTIONS, sched,
+                     seed=seed, count_overhead=False,
+                     autoscaler=get_autoscaler(autoscaler),
+                     sparse=fast, **sim_kw)
+    gw = Gateway(sim, shed_doomed=shed)
+    sc = get_scenario(scenario, app_names=APPS)
+    gw.inject(sc, n, seed=seed + 1, slo_mult=slo_mult)
+    tel = gw.run()
+    return tel, sim
+
+
+def _timeline(sim):
+    tasks = [(t.start_ms, t.end_ms, t.exec_start_ms, t.invoker, t.stage,
+              t.func, t.config, t.tier, t.cold, t.cost, t.quota_slices,
+              t.penalty_ms, t.full_penalty_ms)
+             for t in sim.tasks]
+    done = [(i.uid, i.arrival_ms, i.finish_ms) for i in sim.completed]
+    shed = [i.uid for i in sim.shed]
+    return tasks, done, shed, sim.total_cost, sim.cold_starts, \
+        sim.remote_transfers
+
+
+@pytest.mark.parametrize("scenario", sorted(SCENARIOS))
+def test_fast_path_replays_bit_identically(tables, scenario):
+    tel_f, sim_f = _run(tables, scenario, fast=True)
+    tel_l, sim_l = _run(tables, scenario, fast=False)
+    assert _timeline(sim_f) == _timeline(sim_l)
+    assert sim_f.slo_hit_rate() == sim_l.slo_hit_rate()
+    assert sim_f.gpu_summary() == sim_l.gpu_summary()
+    assert tel_f.summary()["slo_attainment"] == \
+        tel_l.summary()["slo_attainment"]
+
+
+@pytest.mark.parametrize("kw", [
+    dict(hbm_per_vgpu_mb=256.0, slo_mult=0.9, n=40),
+    dict(hbm_per_vgpu_mb=256.0, placement="memory", shared_weights=True,
+         n=40),
+    dict(hbm_per_vgpu_mb=256.0, placement="memory", shared_weights=True,
+         overlap=True, prefetch=True, n=40),
+    dict(autoscaler="finegrained", n=40),
+], ids=["finite-hbm", "memory", "memory-overlap-pf", "finegrained"])
+def test_fast_path_identical_under_memory_pressure(tables, kw):
+    kw = dict(kw)
+    n = kw.pop("n")
+    _, sim_f = _run(tables, "mmpp", n=n, fast=True, **kw)
+    _, sim_l = _run(tables, "mmpp", n=n, fast=False, **kw)
+    assert _timeline(sim_f) == _timeline(sim_l)
+    assert sim_f.gpu_summary() == sim_l.gpu_summary()
+
+
+def test_fast_path_identical_on_large_fleet(tables):
+    """24 invokers puts predecessor-frequency ties past numpy's argsort
+    stability threshold — the regime where any 'equivalent' rewrite of
+    the locality order would silently diverge from the pre-PR code."""
+    _, sim_f = _run(tables, "skewed-mix", n=60, fast=True, n_invokers=24)
+    _, sim_l = _run(tables, "skewed-mix", n=60, fast=False, n_invokers=24)
+    assert _timeline(sim_f) == _timeline(sim_l)
+    assert sim_f.gpu_summary() == sim_l.gpu_summary()
+
+
+def test_sparse_emulator_skips_futile_retries_identically(tables):
+    """Capacity squeeze + wide slack: the sparse emulator must actually
+    exercise the futile-retry proof (skips > 0, strictly fewer plan
+    calls) while replaying the full-scan schedule bit for bit."""
+    kw = dict(n=100, slo_mult=8.0, shed=False, n_invokers=2)
+    _, sim_f = _run(tables, "flash-crowd", fast=True, **kw)
+    _, sim_l = _run(tables, "flash-crowd", fast=False, **kw)
+    assert sim_f.sparse_skips > 0
+    assert len(sim_f.sched_overheads_ms) < len(sim_l.sched_overheads_ms)
+    assert _timeline(sim_f) == _timeline(sim_l)
+    assert sim_f.gpu_summary() == sim_l.gpu_summary()
+    assert sim_f.slo_hit_rate() == sim_l.slo_hit_rate()
+
+
+def test_sparse_with_vertical_autoscaler_never_skips(tables):
+    """A congestion hook with side effects disables the futility proof:
+    every retry must run (and the replay still matches full-scan)."""
+    kw = dict(n=60, slo_mult=6.0, shed=False, n_invokers=2,
+              autoscaler="vertical")
+    _, sim_f = _run(tables, "flash-crowd", fast=True, **kw)
+    _, sim_l = _run(tables, "flash-crowd", fast=False, **kw)
+    assert sim_f.sparse_skips == 0
+    assert _timeline(sim_f) == _timeline(sim_l)
+    assert sim_f.gpu_summary() == sim_l.gpu_summary()
+
+
+def test_sparse_keepalive_expiry_unblocks(tables):
+    """A run long enough to cross keep-alive expiries (the watermark
+    path) still replays identically."""
+    import repro.cluster.emulator as emu
+    old = emu.KEEPALIVE_MS
+    emu.KEEPALIVE_MS = 2_000.0
+    try:
+        _, sim_f = _run(tables, "uniform-heavy", n=60, slo_mult=4.0,
+                        shed=False, fast=True, n_invokers=2)
+        _, sim_l = _run(tables, "uniform-heavy", n=60, slo_mult=4.0,
+                        shed=False, fast=False, n_invokers=2)
+    finally:
+        emu.KEEPALIVE_MS = old
+    assert _timeline(sim_f) == _timeline(sim_l)
+    assert sim_f.gpu_summary() == sim_l.gpu_summary()
+
+
+# ---------------------------------------------------------------------------
+# satellites: streaming trace reader
+# ---------------------------------------------------------------------------
+def test_trace_replay_accepts_generator_rows():
+    def gen():
+        yield from ((float(t), "*") for t in (10, 30, 20))
+    sc = TraceReplayScenario(rows=gen())
+    assert sc.rows == [(10.0, "*"), (20.0, "*"), (30.0, "*")]
+    arr = sc.arrivals(["a", "b"], 5, seed=0)
+    assert [round(a.t_ms, 3) for a in arr] == \
+        [round(x.t_ms, 3) for x in
+         TraceReplayScenario(rows=[(10, "*"), (30, "*"), (20, "*")])
+         .arrivals(["a", "b"], 5, seed=0)]
+
+
+def test_iter_csv_streams_and_matches_read_csv(tmp_path):
+    p = tmp_path / "t.csv"
+    p.write_text("t_ms,app,extra\n10,alpha,x\n\n  , ,\n20,beta,y\n\n")
+    it = TraceReplayScenario.iter_csv(str(p))
+    assert next(it) == (10.0, "alpha")           # truly lazy
+    assert list(it) == [(20.0, "beta")]
+    assert TraceReplayScenario.read_csv(str(p)) == \
+        [(10.0, "alpha"), (20.0, "beta")]
+
+
+def test_iter_csv_errors_keep_naming_file_and_line(tmp_path):
+    p = tmp_path / "bad.csv"
+    p.write_text("t_ms,app\n10,alpha\nnope,beta\n")
+    with pytest.raises(ValueError, match=r"bad\.csv line 3.*t_ms"):
+        list(TraceReplayScenario.iter_csv(str(p)))
+    p2 = tmp_path / "miss.csv"
+    p2.write_text("t_ms,app\n10,\n")
+    with pytest.raises(ValueError, match=r"miss\.csv line 2"):
+        TraceReplayScenario(csv_path=str(p2))
+    p3 = tmp_path / "hdr.csv"
+    p3.write_text("time,function\n1,a\n")
+    with pytest.raises(ValueError, match="t_ms,app"):
+        list(TraceReplayScenario.iter_csv(str(p3)))
+
+
+def test_trace_replay_empty_csv_raises(tmp_path):
+    p = tmp_path / "empty.csv"
+    p.write_text("t_ms,app\n\n")
+    with pytest.raises(ValueError, match="empty trace"):
+        TraceReplayScenario(csv_path=str(p))
