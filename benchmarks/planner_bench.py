@@ -10,7 +10,9 @@ Measures the three PR-5 levers against the pre-optimization reference
     (``tests/fixtures/azure_2019_3min_sample.csv`` through
     ``convert_azure``) replayed at ``speedup=1``, fast vs legacy;
   * **per-scenario wall-clock** — every serving scenario, fast vs
-    legacy, with a bit-identical schedule digest check on each cell.
+    legacy, with a bit-identical schedule digest check on each cell;
+  * **peak RSS** — ``getrusage`` high-water mark of the bench process,
+    so cache/memoization memory growth shows up in the trajectory.
 
 Results land in ``BENCH_planner.json`` (repo root, committed) so later
 PRs have a perf trajectory.  The regression guard compares *ratios*
@@ -28,6 +30,7 @@ from __future__ import annotations
 import argparse
 import json
 import pathlib
+import resource
 import sys
 import time
 
@@ -190,11 +193,19 @@ def main():
               f"({wl / wf:.1f}x)  hit-rate {per_scenario[name]['cache_hit_rate']:.2f} "
               f"identical={same}")
 
+    # peak RSS of the whole bench process (ru_maxrss is KB on Linux):
+    # the plan cache, vectorized engine and replay state all live here,
+    # so the trajectory shows when a "fast path" starts buying speed
+    # with memory
+    peak_rss_mb = resource.getrusage(resource.RUSAGE_SELF).ru_maxrss / 1024
+    print(f"[planner-bench] peak RSS {peak_rss_mb:.0f} MB")
+
     report = {
         "meta": {"seed": args.seed, "smoke": args.smoke, "n": n,
                  "scenarios": scenarios},
         "azure_replay": azure,
         "plans_per_sec": plans,
+        "peak_rss_mb": peak_rss_mb,
         "cache": run_cache_stats,
         "scenarios": per_scenario,
         "guards": {"cached_speedup_min": CACHED_SPEEDUP_MIN,

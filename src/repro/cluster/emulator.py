@@ -43,6 +43,7 @@ from repro.core.profiles import (Config, FunctionProfile, ProfileTable,
                                  VCPU_PRICE_PER_H, VGPU_PRICE_PER_H)
 from repro.core.workflows import Workflow
 from repro.gpu import COLD, DeviceModel, SLICES_PER_VGPU
+from repro.obs import NULL_RECORDER
 
 KEEPALIVE_MS = 600_000.0          # OpenWhisk 10-minute keep-alive
 LOCAL_TRANSFER_MS = 1.0
@@ -245,7 +246,8 @@ class ClusterSim:
                  shared_weights: bool = False,
                  overlap: bool = False,
                  prefetch: bool = False,
-                 sparse: bool = True):
+                 sparse: bool = True,
+                 recorder: Any = None):
         self.apps = apps
         self.tables = tables
         self.profiles = profiles
@@ -285,6 +287,12 @@ class ClusterSim:
                          for i in range(n_invokers)]
         for inv in self.invokers:
             inv.note_expiry = self._note_expiry
+        # flight recorder (repro.obs): the default null object carries
+        # only ``enabled = False`` and every hook site guards on it, so
+        # the disabled path does no work and replays bit-identically
+        self.recorder = NULL_RECORDER if recorder is None else recorder
+        if self.recorder.enabled:
+            self.recorder.bind_sim(self)
         self.noise_sigma = noise_sigma
         self.rng = np.random.default_rng(seed)
         self.count_overhead = count_overhead
@@ -370,6 +378,8 @@ class ClusterSim:
                 self.autoscaler.on_tick(self, payload)
                 self._blocked.clear()
             self._cap_dirty = True
+            if self.recorder.enabled:
+                self.recorder.on_event(self, kind)
             self._schedule_pass()
         return self
 
@@ -421,6 +431,10 @@ class ClusterSim:
                     # mirror the futile retry's only lasting effect
                     self.recheck[key] = self.recheck.get(key, 0) + 1
                     self.sparse_skips += 1
+                    if self.recorder.enabled:
+                        self.recorder.on_sparse_skip(
+                            self.now, key[0], key[1], sig,
+                            self.recheck[key])
                     continue
             self._blocked.discard(key)
 
@@ -429,6 +443,8 @@ class ClusterSim:
         if self.admission is not None and not self.admission(self, inst):
             self.shed.append(inst)       # load-shed at the door
             return
+        if self.recorder.enabled:
+            self.recorder.on_admitted(inst, self.now)
         self.sched.on_arrival(self, inst, self.now)
         for s in inst.app.stages:
             inst.pending_preds[s] = len(inst.app.predecessors(s))
@@ -462,6 +478,8 @@ class ClusterSim:
                     skey = (inst.app.name, s)
                     self.queues[skey].append(Job(inst, s, self.now))
                     self._blocked.discard(skey)
+        if self.recorder.enabled:
+            self.recorder.on_task_complete(self, task)
         # policy hook *after* successors are queued so the autoscaler sees
         # the true backlog (vertical policies grow idle pools here)
         self.autoscaler.on_complete(self, task)
@@ -499,6 +517,8 @@ class ClusterSim:
         if charged:
             overhead_ms = charged
         self.sched_overheads_ms.append(overhead_ms)
+        if self.recorder.enabled:
+            self.recorder.on_plan_timed(self)
         # scheduling overhead delays the task being scheduled (the controller
         # runs one proxy thread per queue — paper §4); it is charged to the
         # dispatched task's start below, not serialised on the global clock.
@@ -732,6 +752,8 @@ class ClusterSim:
         self.tasks.append(task)
         self.running[task.tid] = task
         self.push_event(end, "complete", (task, task.gen))
+        if self.recorder.enabled:
+            self.recorder.on_dispatch(self, task)
         # warm-pool policy hook: reactive scale-up / pre-warm scheduling /
         # scale-down all live in repro.serving.autoscaler
         self.autoscaler.on_dispatch(self, func, inv_idx, cold,
@@ -782,6 +804,8 @@ class ClusterSim:
         task.gen += 1
         self.push_event(task.end_ms, "complete", (task, task.gen))
         self.resizes.append((now, task.invoker, task.tid, old, new_slices))
+        if self.recorder.enabled:
+            self.recorder.on_resize(self, task, old, new_slices)
         return True
 
     # ---- metrics -------------------------------------------------------------

@@ -103,6 +103,10 @@ class PlanCache:
         self.max_exact = max_exact
         self._entries: dict[Hashable, _Entry] = {}
         self.stats = CacheStats()
+        # budget regime the most recent ``lookup`` resolved in
+        # ("floor" | "budget-free" | "exact" | "miss") — read by the
+        # planner-audit recorder right after the call
+        self.last_regime = ""
 
     # -- entry lifecycle ----------------------------------------------------
     def peek(self, key: Hashable) -> Optional[_Entry]:
@@ -132,14 +136,16 @@ class PlanCache:
     # -- the lookup ---------------------------------------------------------
     def lookup(self, key: Hashable, g_slo_ms: float,
                tables: Callable[[], list[ProfileTable]] | list[ProfileTable],
-               penalties: Optional[Sequence[float]] = None
-               ) -> list[PathResult]:
+               penalties: Optional[Sequence[float]] = None,
+               stats: Optional[Any] = None) -> list[PathResult]:
         """Results of ``esg_1q(tables, g_slo_ms, k, penalties)``.
 
         ``tables`` may be a list or a zero-arg factory (only called on an
         entry build).  ``key`` must capture everything that determines
         the search besides the budget: the stage suffix, the batch
-        bucket and the penalty signature."""
+        bucket and the penalty signature.  ``stats`` (a
+        ``repro.core.astar.SearchStats``) is threaded into the miss-path
+        search only — cache hits do no search work by definition."""
         entry = self._entries.get(key)
         if entry is None:
             if callable(tables):
@@ -147,18 +153,22 @@ class PlanCache:
             entry = self._build(key, tables, penalties)
         if g_slo_ms <= entry.t_min:        # esg_1q's min_t[0] >= g_slo branch
             self.stats.hits_floor += 1
+            self.last_regime = "floor"
             return entry.floor
         if g_slo_ms > entry.t_max:
             self.stats.hits_budget_free += 1
+            self.last_regime = "budget-free"
             return entry.budget_free
         cached = entry.exact.get(g_slo_ms)
         if cached is not None:
             self.stats.hits_exact += 1
+            self.last_regime = "exact"
             return cached
         self.stats.misses += 1
+        self.last_regime = "miss"
         result = esg_1q(entry.tables, g_slo_ms, k=self.k,
                         penalties_ms=entry.penalties,
-                        vectorized=self.vectorized)
+                        vectorized=self.vectorized, stats=stats)
         if len(entry.exact) >= self.max_exact:
             entry.exact.pop(next(iter(entry.exact)))
             self.stats.evictions += 1

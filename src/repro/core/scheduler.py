@@ -41,13 +41,14 @@ from typing import Optional
 
 import numpy as np
 
-from repro.core.astar import esg_1q
+from repro.core.astar import SearchStats, esg_1q
 from repro.core.dominator import ScheduleGroup, distribute_slo
 from repro.core.plancache import PlanCache
 from repro.core.profiles import Config, ProfileTable
 from repro.core.workflows import Workflow
 from repro.cluster.emulator import ClusterSim, Job, SchedulerPolicy
 from repro.gpu import HOT, WARM, swap_in_ms
+from repro.obs import PlanRecord
 
 
 class ESGScheduler(SchedulerPolicy):
@@ -214,6 +215,11 @@ class ESGScheduler(SchedulerPolicy):
 
     def plan(self, sim: ClusterSim, app: Workflow, stage: str,
              jobs: list[Job], now: float) -> list[Config]:
+        # planner-decision audit (repro.obs): purely observational — the
+        # stats object only exists when a recorder is attached, and no
+        # decision below reads it
+        rec = getattr(sim, "recorder", None)
+        auditing = rec is not None and rec.enabled and rec.audit is not None
         funcs, base, margin, quota = self._stage_ctx(app, stage)
         w = max(now - j.inst.arrival_ms for j in jobs)
         slo = max(j.inst.slo_ms for j in jobs)
@@ -221,6 +227,12 @@ class ESGScheduler(SchedulerPolicy):
             # deadline already lost: the SLO miss is sunk — serve at the
             # globally cost-optimal config (paper's "ensure progress";
             # Config(1,1,1) would pin a 76B model to one chip for minutes)
+            if auditing:
+                rec.on_plan_result(PlanRecord(
+                    t_ms=now, app=app.name, stage=stage, n_jobs=len(jobs),
+                    g_slo_ms=0.0, regime="sunk", expansions=0,
+                    pruned_time=0, pruned_cost=0, est_time_ms=None,
+                    est_job_cost=None, slack_ms=None, n_candidates=1))
             return [self._cheapest_config(funcs[0], len(jobs))]
         remaining = max(slo - w, 1.0)
         g_slo = remaining * quota
@@ -232,19 +244,35 @@ class ESGScheduler(SchedulerPolicy):
         # weight-swap penalty into the search so the configPQ is ranked
         # by true (swap-inclusive) latency and cost
         penalties = self._penalties(sim, funcs, tables)
+        stats = SearchStats() if auditing else None
         if self.cache is not None:
             pen_key = tuple(penalties) if penalties is not None else None
             results = self.cache.lookup(
-                (app.name, stage, bucket, pen_key), g_slo, tables, penalties)
+                (app.name, stage, bucket, pen_key), g_slo, tables, penalties,
+                stats=stats)
+            regime = self.cache.last_regime
         else:
             results = esg_1q(tables, g_slo, k=self.k, penalties_ms=penalties,
-                             vectorized=self.vectorized)
+                             vectorized=self.vectorized, stats=stats)
+            regime = "nocache"
         out = [r.configs[0] for r in results]
         if len(out) == 1 and results[0].est_time_ms >= g_slo:
             # infeasible target: best-effort fastest path, with cheaper
             # fallbacks so the dispatcher can still place something
             out.append(Config(min(len(jobs), 8), 2, 2))
             out.append(Config(1, 1, 1))
+        if auditing:
+            best = results[0]
+            rec.on_plan_result(PlanRecord(
+                t_ms=now, app=app.name, stage=stage, n_jobs=len(jobs),
+                g_slo_ms=g_slo, regime=regime,
+                expansions=stats.nodes_expanded,
+                pruned_time=stats.pruned_time,
+                pruned_cost=stats.pruned_cost,
+                est_time_ms=best.est_time_ms,
+                est_job_cost=best.est_job_cost,
+                slack_ms=g_slo - best.est_time_ms,
+                n_candidates=len(out)))
         return out
 
     # -- event-sparse emulator hook ----------------------------------------

@@ -160,6 +160,10 @@ class DeviceModel:
         self.allocs: dict[int, Allocation] = {}
         self._aid = itertools.count()
         self.stats = DeviceStats()
+        # flight recorder (repro.obs), set by Recorder.bind_sim; None
+        # means unobserved
+        self.recorder = None
+        self.device_id = -1
 
     # ---- capacity views ---------------------------------------------------
     @property
@@ -290,6 +294,9 @@ class DeviceModel:
                 for c in self.pools[ws.func]:
                     c.tier = WARM
                 self.stats.demotions += 1
+                if self.recorder is not None:
+                    self.recorder.on_demotion(self.device_id, ws.func,
+                                              self._gc_now)
                 continue
             victims = [c for pool in self.pools.values() for c in pool
                        if c.tier == HOT and c.hbm_mb > 0]
@@ -303,6 +310,9 @@ class DeviceModel:
             victim.tier = WARM
             self._abandon_transfer(victim)
             self.stats.demotions += 1
+            if self.recorder is not None:
+                self.recorder.on_demotion(self.device_id, victim.func,
+                                          self._gc_now)
 
     def _hot(self, func: str):
         return [c for c in self.pools[func] if c.tier == HOT]

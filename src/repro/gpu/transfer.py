@@ -76,6 +76,11 @@ class TransferEngine:
         self.busy_ms = 0.0
         self.demand_ms = 0.0
         self.prefetch_ms = 0.0
+        # flight recorder (repro.obs), set by Recorder.bind_sim; None
+        # means unobserved — hooks are guarded so the unrecorded path
+        # does no extra work
+        self.recorder = None
+        self.device_id = -1
 
     # ---- lazy queue progress ----------------------------------------------
     def _advance(self, now: float) -> None:
@@ -110,6 +115,8 @@ class TransferEngine:
         self.busy_ms += dur_ms
         self.demand_ms += dur_ms
         self.block_until = max(self.block_until, tr.done_ms)
+        if self.recorder is not None:
+            self.recorder.on_transfer(self.device_id, tr, DEMAND)
         return tr
 
     def prefetch(self, func: str, dur_ms: float, now: float) -> Transfer:
@@ -119,6 +126,8 @@ class TransferEngine:
         self._advance(now)
         tr = Transfer(func, dur_ms, dur_ms, PREFETCH, now)
         self.queue.append(tr)
+        if self.recorder is not None:
+            self.recorder.on_transfer(self.device_id, tr, PREFETCH)
         return tr
 
     def promote(self, tr: Transfer, now: float) -> Transfer:
@@ -135,6 +144,8 @@ class TransferEngine:
             self.busy_ms += rem
             self.demand_ms += rem
             self.block_until = max(self.block_until, tr.done_ms)
+            if self.recorder is not None:
+                self.recorder.on_promote(self.device_id, tr.func, now)
         return tr
 
     def cancel(self, tr: Transfer) -> None:

@@ -61,6 +61,8 @@ def emulate(setting: str = "moderate-normal", n: int = 200, seed: int = 0,
             scheduler: str = "esg", scenario: str | None = None,
             autoscaler: str | None = None, slo_mult: float = 1.0,
             overlap: bool = False, prefetch: bool = False,
+            trace_out: str | None = None, metrics_out: str | None = None,
+            audit_out: str | None = None,
             log=print) -> dict:
     """Emulated serving over the model zoo.
 
@@ -69,6 +71,10 @@ def emulate(setting: str = "moderate-normal", n: int = 200, seed: int = 0,
     the online-serving stack: ``serving.traces`` arrival engine behind the
     ``serving.gateway`` admission front end, with the warm-pool policy
     named by ``autoscaler`` (ewma | finegrained | vertical | none).
+
+    Any of ``trace_out`` / ``metrics_out`` / ``audit_out`` attaches the
+    flight recorder (``repro.obs``) and exports the Perfetto trace /
+    metrics time-series / planner audit log after the run.
     """
     from repro.serving import Gateway, get_autoscaler, get_scenario
 
@@ -76,8 +82,21 @@ def emulate(setting: str = "moderate-normal", n: int = 200, seed: int = 0,
     profiles = {a: t.fn for a, t in tables.items()}
     sched = _make_scheduler(scheduler, tables)
     scaler = get_autoscaler(autoscaler) if autoscaler else None
+    recorder = None
+    if trace_out or metrics_out or audit_out:
+        from repro.obs import Recorder
+        recorder = Recorder()
     sim = ClusterSim(ZOO_APPS, tables, profiles, sched, seed=seed,
-                     autoscaler=scaler, overlap=overlap, prefetch=prefetch)
+                     autoscaler=scaler, overlap=overlap, prefetch=prefetch,
+                     recorder=recorder)
+
+    def _export():
+        if recorder is None:
+            return
+        written = recorder.export(trace_out, metrics_out, audit_out)
+        for kind, path in written.items():
+            log(f"[obs] wrote {kind} -> {path}")
+
     if scenario is None:
         generate(sim, setting, n, profiles, seed=seed + 1)
         sim.run()
@@ -85,6 +104,7 @@ def emulate(setting: str = "moderate-normal", n: int = 200, seed: int = 0,
         log(f"[serve-emulate] {s['scheduler']}: hit={s['slo_hit_rate']:.3f} "
             f"cost=${s['total_cost']:.4f} mean_lat={s['mean_latency_ms']:.0f}ms "
             f"sched_ovh={s['mean_sched_overhead_ms']:.2f}ms")
+        _export()
         return s
     gw = Gateway(sim)
     sc = get_scenario(scenario, app_names=list(ZOO_APPS))
@@ -96,6 +116,7 @@ def emulate(setting: str = "moderate-normal", n: int = 200, seed: int = 0,
         f"slo={s['slo_attainment']:.3f} $/1k={s['cost_per_1k']:.4f} "
         f"cold={s['cold_starts']} shed={s['shed']} "
         f"p95={s['latency']['p95_ms']:.0f}ms")
+    _export()
     return s
 
 
@@ -206,6 +227,15 @@ def main():
     ap.add_argument("--prefetch", action="store_true",
                     help="predictive next-stage weight prefetch "
                          "(requires --overlap)")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="record per-request spans and write a "
+                         "Perfetto-loadable Chrome-trace JSON here")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="record windowed metrics and write JSON "
+                         "(or CSV if PATH ends in .csv) here")
+    ap.add_argument("--audit-out", default=None, metavar="PATH",
+                    help="record the planner decision audit log "
+                         "and write JSONL here")
     args = ap.parse_args()
     if args.real:
         serve_real(arch=args.arch, n_requests=args.n if args.n else 48)
@@ -213,7 +243,9 @@ def main():
         emulate(args.setting, args.n, seed=args.seed,
                 scheduler=args.scheduler, scenario=args.scenario,
                 autoscaler=args.autoscaler, slo_mult=args.slo_mult,
-                overlap=args.overlap, prefetch=args.prefetch)
+                overlap=args.overlap, prefetch=args.prefetch,
+                trace_out=args.trace_out, metrics_out=args.metrics_out,
+                audit_out=args.audit_out)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,158 @@
+"""Planner decision audit log.
+
+One structured :class:`PlanRecord` per ``ESGScheduler.plan`` call —
+which plan-cache budget regime served it (floor / budget-free / exact /
+miss), how much work the A* search did (expansions, dual-blade prune
+counts — zero on a cache hit), the chosen path's predicted latency/cost
+against its G_SLO budget, and, back-filled when the dispatched task
+completes, the realized stage latency next to the predicted one.  Plus
+one :class:`SkipRecord` per event-sparse ``sparse_skips`` decision,
+naming the plan-signature certificate that proved the retry futile.
+
+This is the layer that makes a mispriced plan *visible*: the
+``calibration()`` block aggregates per-stage predicted-vs-realized
+error quantiles (surfaced through ``Telemetry.summary()``), and the
+JSONL export lets a single bad decision be traced from its budget and
+regime to the task it produced.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from collections import defaultdict
+from typing import Any, Optional
+
+
+@dataclasses.dataclass
+class PlanRecord:
+    """One ``plan()`` call and the dispatch it led to (if any)."""
+    t_ms: float
+    app: str
+    stage: str
+    n_jobs: int
+    g_slo_ms: float                  # budget handed to ESG_1Q (0 when sunk)
+    regime: str                      # floor|budget-free|exact|miss|nocache|sunk
+    expansions: int                  # A* nodes expanded (0 on cache hits)
+    pruned_time: int                 # time-blade prunes
+    pruned_cost: int                 # cost-blade prunes
+    est_time_ms: Optional[float]     # chosen path's predicted suffix latency
+    est_job_cost: Optional[float]
+    slack_ms: Optional[float]        # g_slo - est_time of the chosen path
+    n_candidates: int
+    # --- back-filled at dispatch / completion ---
+    task_tid: Optional[int] = None
+    config: Optional[Any] = None     # the dispatched Config (JSON: nested)
+    predicted_ms: Optional[float] = None   # this stage, dispatched config
+    realized_ms: Optional[float] = None    # start -> end, noise + resizes
+
+
+@dataclasses.dataclass
+class SkipRecord:
+    """One provably-futile retry skipped by the event-sparse emulator."""
+    t_ms: float
+    app: str
+    stage: str
+    certificate: str                 # the plan-signature token that proved it
+    recheck: int                     # recheck counter at skip time
+
+
+class AuditLog:
+    def __init__(self):
+        self.plans: list[PlanRecord] = []
+        self.skips: list[SkipRecord] = []
+        # most recent un-dispatched record per (app, stage): the emulator
+        # calls plan() then dispatches at most one task from its result
+        self._pending: dict[tuple[str, str], PlanRecord] = {}
+        self._by_tid: dict[int, PlanRecord] = {}
+
+    # ---- recording ---------------------------------------------------------
+    def on_plan(self, rec: PlanRecord) -> PlanRecord:
+        self.plans.append(rec)
+        self._pending[(rec.app, rec.stage)] = rec
+        return rec
+
+    def on_dispatch(self, app: str, stage: str, tid: int, config: Any,
+                    predicted_ms: float):
+        rec = self._pending.pop((app, stage), None)
+        if rec is None:
+            return
+        rec.task_tid = tid
+        rec.config = config
+        rec.predicted_ms = predicted_ms
+        self._by_tid[tid] = rec
+
+    def on_complete(self, tid: int, realized_ms: float):
+        rec = self._by_tid.pop(tid, None)
+        if rec is not None:
+            rec.realized_ms = realized_ms
+
+    def on_skip(self, t_ms: float, app: str, stage: str, certificate: Any,
+                recheck: int):
+        self.skips.append(SkipRecord(t_ms, app, stage, str(certificate),
+                                     recheck))
+
+    # ---- analysis ----------------------------------------------------------
+    @staticmethod
+    def _quantile(xs: list[float], q: float) -> float:
+        """Nearest-rank quantile without numpy (xs non-empty, sorted)."""
+        i = min(int(q * (len(xs) - 1) + 0.5), len(xs) - 1)
+        return xs[i]
+
+    def calibration(self) -> dict[str, Any]:
+        """Predicted-vs-realized per-stage latency error quantiles.
+
+        Relative error is (realized - predicted) / predicted: positive
+        means the plan was optimistic (exec noise, resizes, contention),
+        negative pessimistic.  Per-(app, stage) plus an overall block.
+        """
+        per: dict[str, list[float]] = defaultdict(list)
+        for rec in self.plans:
+            if rec.predicted_ms is None or rec.realized_ms is None \
+                    or rec.predicted_ms <= 0:
+                continue
+            err = (rec.realized_ms - rec.predicted_ms) / rec.predicted_ms
+            per[f"{rec.app}/{rec.stage}"].append(err)
+        out: dict[str, Any] = {}
+        all_errs: list[float] = []
+        for key in sorted(per):
+            errs = sorted(per[key])
+            all_errs.extend(errs)
+            out[key] = {
+                "n": len(errs),
+                "mean_err": sum(errs) / len(errs),
+                "p50_err": self._quantile(errs, 0.50),
+                "p90_abs_err": self._quantile(sorted(abs(e) for e in errs),
+                                              0.90),
+            }
+        all_errs.sort()
+        return {
+            "n": len(all_errs),
+            "mean_err": (sum(all_errs) / len(all_errs)) if all_errs else 0.0,
+            "p50_err": self._quantile(all_errs, 0.50) if all_errs else 0.0,
+            "p90_abs_err": self._quantile(
+                sorted(abs(e) for e in all_errs), 0.90) if all_errs else 0.0,
+            "per_stage": out,
+        }
+
+    def regimes(self) -> dict[str, int]:
+        counts: dict[str, int] = defaultdict(int)
+        for rec in self.plans:
+            counts[rec.regime] += 1
+        return dict(counts)
+
+    # ---- export ------------------------------------------------------------
+    def export_jsonl(self, path: str) -> int:
+        """One JSON object per line: plan records then skip records."""
+        n = 0
+        with open(path, "w") as f:
+            for rec in self.plans:
+                f.write(json.dumps({"type": "plan",
+                                    **dataclasses.asdict(rec)},
+                                   sort_keys=True, default=str) + "\n")
+                n += 1
+            for skip in self.skips:
+                f.write(json.dumps({"type": "skip",
+                                    **dataclasses.asdict(skip)},
+                                   sort_keys=True, default=str) + "\n")
+                n += 1
+        return n

@@ -1,0 +1,119 @@
+"""Chrome-trace / metrics-export schema validation.
+
+Used three ways: by the test suite's golden-fixture checks, by CI (the
+obs smoke step runs ``python -m repro.obs.validate trace.json
+metrics.json``) and manually on any exported artifact.  The trace check
+enforces the Chrome-trace contract Perfetto actually relies on — every
+event carries ``ph``/``ts``/``pid``/``tid``, every complete slice ("X")
+carries ``dur`` — plus the flight-recorder-specific requirement that at
+least one complete span exists for each request lifecycle phase
+(request envelope, queue wait, exec; ``xfer`` appears only when some
+start paid a restart penalty, so it is opt-in via ``required``).
+"""
+from __future__ import annotations
+
+import json
+import sys
+from typing import Any, Iterable
+
+REQUIRED_PHASES = ("request", "queue", "exec")
+
+
+def validate_trace(doc: dict[str, Any],
+                   required: Iterable[str] = REQUIRED_PHASES) -> dict[str, int]:
+    """Validate a Chrome-trace document; returns per-category X-span
+    counts.  Raises ``ValueError`` with a precise message on the first
+    violation."""
+    if not isinstance(doc, dict) or "traceEvents" not in doc:
+        raise ValueError("not a Chrome-trace document: missing traceEvents")
+    events = doc["traceEvents"]
+    if not isinstance(events, list):
+        raise ValueError("traceEvents must be a list")
+    counts: dict[str, int] = {}
+    for i, e in enumerate(events):
+        for field in ("ph", "pid", "tid"):
+            if field not in e:
+                raise ValueError(f"event {i} missing {field!r}: {e}")
+        ph = e["ph"]
+        if ph not in ("X", "i", "M"):
+            raise ValueError(f"event {i} has unknown ph {ph!r}")
+        if ph != "M" and "ts" not in e:
+            raise ValueError(f"event {i} ({ph}) missing ts")
+        if ph == "X":
+            if "dur" not in e:
+                raise ValueError(f"event {i} (complete span) missing dur")
+            if e["dur"] < 0:
+                raise ValueError(f"event {i} has negative dur {e['dur']}")
+            counts[e.get("cat", "?")] = counts.get(e.get("cat", "?"), 0) + 1
+    missing = [c for c in required if counts.get(c, 0) < 1]
+    if missing:
+        raise ValueError(
+            f"no complete span for lifecycle phase(s) {missing}; "
+            f"have {counts}")
+    return counts
+
+
+def validate_nesting(doc: dict[str, Any]) -> None:
+    """Check stage spans sit inside their request envelope: on every
+    request pid, each queue/xfer/exec slice's interval must be contained
+    in the union of that pid's request-cat slices."""
+    from repro.obs.tracer import REQUEST_PID_BASE
+    envelope: dict[int, list[tuple[float, float]]] = {}
+    inner: dict[int, list[tuple[float, float, str]]] = {}
+    for e in doc["traceEvents"]:
+        if e["ph"] != "X" or e["pid"] < REQUEST_PID_BASE:
+            continue
+        t0, t1 = e["ts"], e["ts"] + e["dur"]
+        if e.get("cat") == "request":
+            envelope.setdefault(e["pid"], []).append((t0, t1))
+        else:
+            inner.setdefault(e["pid"], []).append((t0, t1, e["name"]))
+    eps = 1e-6
+    for pid, spans in inner.items():
+        envs = envelope.get(pid, [])
+        for t0, t1, name in spans:
+            if not any(a - eps <= t0 and t1 <= b + eps for a, b in envs):
+                raise ValueError(
+                    f"span {name!r} [{t0}, {t1}] on pid {pid} escapes its "
+                    f"request envelope {envs}")
+
+
+def validate_metrics(doc: dict[str, Any]) -> int:
+    """Validate a MetricsBus JSON export; returns the series count."""
+    if "window_ms" not in doc or "series" not in doc:
+        raise ValueError("not a metrics export: missing window_ms/series")
+    for name, s in doc["series"].items():
+        if s.get("kind") not in ("counter", "gauge", "hist"):
+            raise ValueError(f"series {name!r} has bad kind {s.get('kind')!r}")
+        if not isinstance(s.get("points"), list):
+            raise ValueError(f"series {name!r} missing points list")
+    return len(doc["series"])
+
+
+def main(argv: list[str] | None = None) -> int:
+    argv = sys.argv[1:] if argv is None else argv
+    if not argv:
+        print("usage: python -m repro.obs.validate TRACE.json "
+              "[METRICS.json] [AUDIT.jsonl]", file=sys.stderr)
+        return 2
+    with open(argv[0]) as f:
+        trace = json.load(f)
+    counts = validate_trace(trace)
+    validate_nesting(trace)
+    print(f"[obs-validate] trace OK: "
+          + ", ".join(f"{c}={n}" for c, n in sorted(counts.items())))
+    if len(argv) > 1:
+        with open(argv[1]) as f:
+            n = validate_metrics(json.load(f))
+        print(f"[obs-validate] metrics OK: {n} series")
+    if len(argv) > 2:
+        with open(argv[2]) as f:
+            records = [json.loads(line) for line in f if line.strip()]
+        if any("type" not in r for r in records):
+            raise ValueError("audit record missing type field")
+        print(f"[obs-validate] audit OK: {len(records)} records")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

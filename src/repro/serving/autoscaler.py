@@ -85,6 +85,9 @@ class AutoscalerPolicy:
         issued = 0
         for succ in app.edges.get(stage, ()):
             issued += int(inv.prefetch(app.func_of[succ], sim.now))
+        rec = getattr(sim, "recorder", None)
+        if issued and rec is not None and rec.enabled:
+            rec.on_prefetch_issued(sim.now, issued)
         return issued
 
     # ---- shared helpers ---------------------------------------------------
@@ -255,8 +258,12 @@ class FineGrained(AutoscalerPolicy):
                 ((c, inv) for inv in sim.invokers
                  for c in inv.device.warm_entries(func, sim.now)),
                 key=lambda p: -p[0].expiry)
+            rec = getattr(sim, "recorder", None)
+            recording = rec is not None and rec.enabled
             for c, inv in pools[:surplus]:
                 inv.device.retire(func, c)
+                if recording:
+                    rec.on_retire(sim.now)
 
     def on_tick(self, sim, payload):
         from repro.cluster.emulator import KEEPALIVE_MS

@@ -88,6 +88,10 @@ class Gateway:
     # ---- admission ---------------------------------------------------------
     def _admit(self, sim, inst) -> bool:
         self.telemetry.on_injected(inst.app.name)
+        rec = getattr(sim, "recorder", None)
+        recording = rec is not None and rec.enabled
+        if recording:
+            rec.on_injected(inst.app.name, sim.now)
         if self.shed_doomed:
             budget = inst.deadline_ms - sim.now
             fastest = self._fastest_ms[inst.app.name]
@@ -96,6 +100,8 @@ class Gateway:
                 self.telemetry.on_shed(inst.app.name, t_ms=sim.now,
                                        budget_ms=budget, need_ms=need,
                                        fastest_ms=fastest)
+                if recording:
+                    rec.on_shed(inst, sim.now, budget, need)
                 return False
         self.telemetry.on_admitted(inst.app.name)
         return True

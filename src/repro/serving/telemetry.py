@@ -48,6 +48,7 @@ class LatencyHistogram:
         self.total = 0.0
         self.n = 0
         self.max_ms = 0.0
+        self._cum: Optional[np.ndarray] = None   # cumsum cache
 
     def record(self, ms: float):
         idx = int(np.searchsorted(self.bounds, ms, side="right"))
@@ -55,17 +56,41 @@ class LatencyHistogram:
         self.total += ms
         self.n += 1
         self.max_ms = max(self.max_ms, ms)
+        self._cum = None
+
+    def merge(self, other: "LatencyHistogram") -> "LatencyHistogram":
+        """Fold ``other`` into this histogram in place (sharded-emulator
+        aggregation): the result is exactly what recording the union of
+        both sample streams would have produced.  Bucket layouts must
+        match."""
+        if self.bounds.shape != other.bounds.shape or \
+                not np.array_equal(self.bounds, other.bounds):
+            raise ValueError("cannot merge histograms with different "
+                             "bucket layouts")
+        self.counts += other.counts
+        self.total += other.total
+        self.n += other.n
+        self.max_ms = max(self.max_ms, other.max_ms)
+        self._cum = None
+        return self
 
     @property
     def mean(self) -> float:
         return self.total / self.n if self.n else 0.0
+
+    def _cumsum(self) -> np.ndarray:
+        # O(1) amortised across repeated percentile() calls (to_dict
+        # alone takes three); invalidated by record()/merge()
+        if self._cum is None:
+            self._cum = np.cumsum(self.counts)
+        return self._cum
 
     def percentile(self, p: float) -> float:
         """p in [0, 100]; linear interpolation within the hit bucket."""
         if not self.n:
             return 0.0
         rank = p / 100.0 * self.n
-        cum = np.cumsum(self.counts)
+        cum = self._cumsum()
         idx = int(np.searchsorted(cum, rank, side="left"))
         idx = min(idx, len(self.counts) - 1)
         lo = self.bounds[idx - 1] if idx > 0 else 0.0
@@ -124,6 +149,10 @@ class Telemetry:
         self.shed_true = 0
         self.shed_false = 0
         self.shed_unknown = 0
+        # planner-audit calibration (predicted vs realized per-stage
+        # latency error quantiles), filled by collect() when the sim
+        # carries an enabled flight recorder with an audit log
+        self.predicted_vs_realized: dict[str, Any] = {}
 
     # ---- gateway-side ------------------------------------------------------
     def on_injected(self, app: str):
@@ -174,6 +203,10 @@ class Telemetry:
             self.completed += 1
             self.slo_hits += int(lat <= inst.slo_ms)
         self._score_sheds(sim)
+        rec = getattr(sim, "recorder", None)
+        if rec is not None and getattr(rec, "enabled", False) \
+                and getattr(rec, "audit", None) is not None:
+            self.predicted_vs_realized = rec.calibration()
         return self
 
     def _score_sheds(self, sim) -> None:
@@ -268,6 +301,7 @@ class Telemetry:
             "shed_precision": self.shed_precision(),
             "prefetch_hit_rate": self.prefetch_hit_rate(),
             "penalty_hidden_frac": self.penalty_hidden_frac(),
+            "predicted_vs_realized": dict(self.predicted_vs_realized),
             "gpu": dict(self.gpu),
             "latency": self.e2e.to_dict(),
             "per_stage": {
@@ -312,7 +346,10 @@ def format_table(rows: list[dict[str, Any]],
         row = []
         for key, _, fmt in cols:
             v = flat.get(key, "")
-            row.append(fmt.format(v) if v != "" else "-")
+            # None metrics (e.g. shed_precision / prefetch_hit_rate with
+            # nothing scorable) render as '-', same as missing keys —
+            # "{:.1%}".format(None) would raise
+            row.append(fmt.format(v) if v != "" and v is not None else "-")
         cells.append(row)
     widths = [max(len(c[i]) for c in cells) for i in range(len(cols))]
     lines = ["  ".join(c.ljust(w) for c, w in zip(row, widths))
