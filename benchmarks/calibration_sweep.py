@@ -1,0 +1,191 @@
+"""Closed-loop calibration sweep: injected profile error vs the online
+calibrator, across all six serving scenarios.
+
+The acceptance experiment for ISSUE-7's pricing loop: the *controller's*
+profile tables are skewed by a +/-30% multiplicative error on exec_ms
+(``FunctionProfile.exec_ms`` is exactly linear in ``t1_ms``, so scaling
+``t1_ms`` is an exact multiplicative exec skew), while the emulator
+keeps the true profiles as ground truth.  Every scenario then runs two
+arms on the same seed and skew:
+
+  * **off** — the skewed planner as-is (the flight recorder attached
+    but passive, so the audit stream measures the misprediction);
+  * **on**  — the same planner with a ``ProfileCalibrator`` subscribed
+    to the audit stream: per-(app, stage) EWMA correction factors learn
+    the realized/predicted ratio online and rescale the plan tables.
+
+Per arm the sweep reports the audit stream's mean absolute
+predicted-vs-realized stage-latency error, SLO attainment (sheds count
+as misses), the median end-to-end SLO slack of completed requests, and
+cost.  The bars (enforced unless ``--smoke``):
+
+  * calibration cuts mean abs stage-latency error by >= 2x,
+  * median SLO slack tightens (skew is overestimate-heavy, so the
+    uncalibrated planner systematically overprovisions),
+  * no attainment loss,
+
+on every scenario.  Results land in
+``benchmarks/results/calibration_sweep.csv``.
+
+    PYTHONPATH=src python benchmarks/calibration_sweep.py
+    PYTHONPATH=src python benchmarks/calibration_sweep.py --smoke
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import pathlib
+import sys
+
+HERE = pathlib.Path(__file__).resolve().parent
+
+from common import PAPER_APPS, ClusterSim, paper_tables, write_csv  # noqa: E402
+from repro.core.profiles import PAPER_FUNCTIONS, ProfileTable  # noqa: E402
+from repro.core.scheduler import ESGScheduler  # noqa: E402
+from repro.obs import ProfileCalibrator, Recorder  # noqa: E402
+from repro.serving import Gateway, get_autoscaler, get_scenario  # noqa: E402
+
+SCENARIO_NAMES = ["uniform-normal", "diurnal", "mmpp", "flash-crowd",
+                  "azure-tail", "skewed-mix"]
+
+# Controller-side multiplicative exec_ms skew per function: +/-30%,
+# overestimate-heavy (the common failure mode — offline profiling on a
+# noisy shared box inflates estimates), deterministic so both arms and
+# every rerun see the identical injected error.
+SKEW = {
+    "super_resolution": 1.3,
+    "segmentation": 0.7,
+    "deblur": 1.3,
+    "classification": 1.3,
+    "background_removal": 0.7,
+    "depth": 1.3,
+}
+
+ERROR_CUT_MIN = 2.0            # ISSUE-7 acceptance: >= 2x error reduction
+
+# Both arms carry a small planner risk margin (the existing
+# ``risk_sigma`` knob — arm-neutral, so the comparison stays fair), and
+# the calibrated arm publishes factors with a 2% conservative headroom:
+# a *correctly* calibrated planner otherwise rides the budget edge,
+# where per-task execution noise plus the EWMA's own wander tips a
+# handful of tail requests over — the padding the mis-profiled tables
+# happened to provide was doing the risk margin's job by accident.
+RISK_SIGMA = 0.01
+HEADROOM = 1.02
+
+# The sweep showcases steady-state *tracking accuracy* under a large
+# injected skew, so its calibrator runs hot: a short warmup and a fine
+# 2% publication granularity.  The shipped defaults (min_samples=10,
+# 5% steps) deliberately trade the last few percent of tracking for
+# plan-cache friendliness — see the closed-loop bar in
+# ``obs_overhead.py``: every publish invalidates cached plans, and at
+# this sweep's settings an accurately-profiled stage would republish
+# on pure execution noise.
+MIN_SAMPLES = 5
+PUBLISH_STEP = 0.02
+
+
+def skewed_tables() -> dict[str, ProfileTable]:
+    """The controller's (wrong) view: exec estimates off by SKEW[f]."""
+    return {name: ProfileTable.build(
+        dataclasses.replace(fn, t1_ms=fn.t1_ms * SKEW[name]))
+        for name, fn in PAPER_FUNCTIONS.items()}
+
+
+def run_arm(scenario: str, tables, n: int, seed: int, calibrate: bool):
+    sched = ESGScheduler(PAPER_APPS, tables, risk_sigma=RISK_SIGMA)
+    rec = Recorder(trace=False)          # audit + metrics; spans not needed
+    if calibrate:
+        sched.calibrator = ProfileCalibrator(
+            min_samples=MIN_SAMPLES, headroom=HEADROOM,
+            publish_rel_step=PUBLISH_STEP).attach(rec.audit)
+    # controller plans on the skewed tables; the emulator executes on
+    # the true PAPER_FUNCTIONS profiles — exactly a mis-profiled fleet
+    sim = ClusterSim(PAPER_APPS, tables, PAPER_FUNCTIONS, sched,
+                     seed=seed, count_overhead=False,
+                     autoscaler=get_autoscaler("ewma"), recorder=rec)
+    gw = Gateway(sim)
+    gw.inject(get_scenario(scenario, app_names=list(PAPER_APPS)), n,
+              seed=seed + 1, slo_mult=1.0)
+    tel = gw.run()
+    cal = rec.audit.calibration()
+    slacks = sorted(i.slo_ms - (i.finish_ms - i.arrival_ms)
+                    for i in sim.completed)
+    return {
+        "arm": "on" if calibrate else "off",
+        "scenario": scenario,
+        "n": n,
+        "completed": tel.completed,
+        "shed": tel.n_shed,
+        "attainment": tel.slo_attainment(),
+        "mean_abs_err": cal["mean_abs_err"],
+        "p90_abs_err": cal["p90_abs_err"],
+        "median_slack_ms": slacks[len(slacks) // 2] if slacks else 0.0,
+        "cost_per_1k": tel.cost_per_1k(),
+        "factor_updates": sched.calibrator.updates if calibrate else 0,
+    }
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--n", type=int, default=300,
+                    help="requests injected per scenario")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI mode: two scenarios, fewer requests, "
+                         "report-only (no acceptance gating)")
+    args = ap.parse_args()
+    scenarios = SCENARIO_NAMES[:2] if args.smoke else SCENARIO_NAMES
+    n = min(args.n, 80) if args.smoke else args.n
+
+    tables = skewed_tables()
+    rows, failures = [], []
+    for sc in scenarios:
+        off = run_arm(sc, tables, n, args.seed, calibrate=False)
+        on = run_arm(sc, tables, n, args.seed, calibrate=True)
+        rows += [off, on]
+        cut = off["mean_abs_err"] / on["mean_abs_err"] \
+            if on["mean_abs_err"] else float("inf")
+        print(f"[calibration] {sc}: |err| {off['mean_abs_err']:.3f} -> "
+              f"{on['mean_abs_err']:.3f} ({cut:.1f}x cut), "
+              f"slack {off['median_slack_ms']:.0f} -> "
+              f"{on['median_slack_ms']:.0f} ms, "
+              f"slo {off['attainment']:.3f} -> {on['attainment']:.3f}, "
+              f"$/1k {off['cost_per_1k']:.4f} -> {on['cost_per_1k']:.4f} "
+              f"({on['factor_updates']} factor updates)")
+        if cut < ERROR_CUT_MIN:
+            failures.append(f"{sc}: error cut {cut:.2f}x < "
+                            f"{ERROR_CUT_MIN:.0f}x")
+        if on["median_slack_ms"] > off["median_slack_ms"]:
+            failures.append(f"{sc}: median slack widened "
+                            f"({off['median_slack_ms']:.0f} -> "
+                            f"{on['median_slack_ms']:.0f} ms)")
+        if on["attainment"] < off["attainment"]:
+            failures.append(f"{sc}: attainment lost "
+                            f"({off['attainment']:.3f} -> "
+                            f"{on['attainment']:.3f})")
+
+    header = ["scenario", "arm", "n", "completed", "shed", "attainment",
+              "mean_abs_err", "p90_abs_err", "median_slack_ms",
+              "cost_per_1k", "factor_updates"]
+    # smoke runs land in a scratch file so CI never clobbers the
+    # committed full-run results
+    name = "calibration_sweep_smoke" if args.smoke else "calibration_sweep"
+    path = write_csv(name, header, [[r[k] for k in header] for r in rows])
+    print(f"[calibration] wrote {path}")
+    if args.smoke:
+        if failures:
+            print(f"[calibration] smoke: {len(failures)} bar(s) missed "
+                  f"at reduced n (full run enforces)")
+        print("[calibration] smoke OK")
+        return 0
+    for f in failures:
+        print(f"[calibration] FAIL: {f}")
+    if not failures:
+        print("[calibration] OK: >=2x error cut, tighter median slack, "
+              "no attainment loss on all scenarios")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -10,15 +10,24 @@ contracts:
     GPU ledger) is bit-identical with the recorder on: observing a run
     must not change it;
   * **cheapness** — end-to-end wall-clock overhead of recording stays
-    under ``OVERHEAD_MAX`` (15%, the ISSUE-6 acceptance bar).  The two
-    arms are timed as ``--repeat`` interleaved pairs and compared by
-    median, so a noisy neighbour hitting one arm's slot does not fake
-    (or mask) an overhead regression.
+    under ``OVERHEAD_MAX`` (15%, the ISSUE-6 acceptance bar).  All arms
+    are timed round-robin in one interleaved loop and compared by
+    best-of-``--repeat``: the workload is deterministic, so scheduling
+    noise, frequency scaling and cache pollution are strictly additive
+    — the minimum is the least-contaminated estimate of each arm's true
+    cost (the ``timeit`` convention), and interleaving keeps a drifting
+    host from biasing whichever arm happens to run last.
 
 The recorded arm also exports trace/metrics/audit to a temp dir and
 runs ``repro.obs.validate`` over them, so the benchmark doubles as an
-end-to-end smoke of the export pipeline.  Results land in
-``benchmarks/results/obs_overhead.json``.
+end-to-end smoke of the export pipeline.
+
+A third, **closed-loop** arm re-times the recorded run with the online
+profile calibrator and the SLO health engine attached (ISSUE-7): the
+feedback layer may legitimately *change* the schedule, so it is held to
+the same <15% wall-clock bar but not to the digest check, and its
+health-alert export is validated alongside the passive artifacts.
+Results land in ``benchmarks/results/obs_overhead.json``.
 
     PYTHONPATH=src python benchmarks/obs_overhead.py
     PYTHONPATH=src python benchmarks/obs_overhead.py --n 120 --repeat 5
@@ -29,7 +38,6 @@ import argparse
 import gc
 import json
 import pathlib
-import statistics
 import sys
 import tempfile
 import time
@@ -42,9 +50,9 @@ from convert_azure import convert, load_counts  # noqa: E402
 from planner_bench import AZURE_FIXTURE, schedule_digest  # noqa: E402
 from repro.core.profiles import PAPER_FUNCTIONS  # noqa: E402
 from repro.core.scheduler import ESGScheduler  # noqa: E402
-from repro.obs import Recorder  # noqa: E402
-from repro.obs.validate import validate_metrics, validate_nesting, \
-    validate_trace  # noqa: E402
+from repro.obs import HealthEngine, ProfileCalibrator, Recorder  # noqa: E402
+from repro.obs.validate import validate_health, validate_metrics, \
+    validate_nesting, validate_trace  # noqa: E402
 from repro.serving import Gateway, get_autoscaler  # noqa: E402
 from repro.serving.traces import TraceReplayScenario  # noqa: E402
 
@@ -52,12 +60,14 @@ OUT = HERE / "results" / "obs_overhead.json"
 OVERHEAD_MAX = 0.15            # ISSUE-6 acceptance bar
 
 
-def run_once(rows, n: int, seed: int, recorder=None):
+def run_once(rows, n: int, seed: int, recorder=None, calibrate=False):
     sched = ESGScheduler(PAPER_APPS, paper_tables())
+    if calibrate and recorder is not None:
+        sched.calibrator = ProfileCalibrator().attach(recorder.audit)
     sim = ClusterSim(PAPER_APPS, sched.tables, PAPER_FUNCTIONS, sched,
                      seed=seed, count_overhead=False,
                      autoscaler=get_autoscaler("ewma"), recorder=recorder)
-    gw = Gateway(sim)
+    gw = Gateway(sim, health=recorder.health if recorder else None)
     gw.inject(TraceReplayScenario(rows=rows, speedup=1.0), n, seed=seed + 1,
               slo_mult=1.0)
     # CPU time, not wall-clock: the overhead ratio must survive noisy
@@ -85,17 +95,32 @@ def main():
     sim_off, _ = run_once(rows, args.n, args.seed)
     identical = schedule_digest(sim_on) == schedule_digest(sim_off)
 
-    # ... then interleaved median-of-N timing for the ratio
-    wall_off, wall_on = [], []
+    # ... then round-robin best-of-N timing for the ratios.  The third,
+    # closed-loop arm (ISSUE-7) re-times the recorded run with the
+    # online calibrator and the health engine attached: feedback may
+    # legitimately change the schedule, so it skips the digest check but
+    # is held to the same wall-clock bar against the same bare baseline.
+    wall_off, wall_on, wall_closed = [], [], []
     for _ in range(max(args.repeat, 1)):
         gc.collect()
         wall_off.append(run_once(rows, args.n, args.seed)[1])
         gc.collect()
         wall_on.append(run_once(rows, args.n, args.seed,
                                 recorder=Recorder())[1])
-    off = statistics.median(wall_off)
-    on = statistics.median(wall_on)
+        gc.collect()
+        wall_closed.append(run_once(
+            rows, args.n, args.seed, calibrate=True,
+            recorder=Recorder(health=HealthEngine()))[1])
+    off = min(wall_off)
+    on = min(wall_on)
     overhead = on / off - 1.0
+    closed = min(wall_closed)
+    closed_overhead = closed / off - 1.0
+    rec_closed = Recorder(health=HealthEngine())
+    sim_closed, _ = run_once(rows, args.n, args.seed, recorder=rec_closed,
+                             calibrate=True)
+    cal_state = sim_closed.sched.calibrator.summary()
+    cal_state.pop("per_stage", None)
 
     # export + validate the observed run's artifacts
     with tempfile.TemporaryDirectory() as td:
@@ -109,6 +134,10 @@ def main():
         validate_metrics(metrics)
         audit_lines = [json.loads(l) for l in
                        (td / "audit.jsonl").read_text().splitlines()]
+        rec_closed.export(health_path=str(td / "health.jsonl"))
+        alerts = [json.loads(l) for l in
+                  (td / "health.jsonl").read_text().splitlines()]
+        validate_health(alerts, str(td / "health.jsonl"))
 
     cal = recorder.calibration()
     cal.pop("per_stage", None)
@@ -117,15 +146,23 @@ def main():
                  "fixture": AZURE_FIXTURE.name},
         "identical": identical,
         "wall_s_off": off, "wall_s_on": on, "overhead_frac": overhead,
+        "wall_s_closed_loop": closed,
+        "closed_loop_overhead_frac": closed_overhead,
         "overhead_max": OVERHEAD_MAX,
         "trace_spans": cats,
         "metrics_series": len(metrics["series"]),
         "audit_records": len(audit_lines),
+        "health_alerts": len(alerts),
         "calibration": cal,
+        "calibrator": cal_state,
     }
     print(f"[obs-overhead] azure 3-min fixture (n={args.n}): "
           f"off {off:.2f}s vs on {on:.2f}s -> +{overhead:.1%} "
           f"(bar {OVERHEAD_MAX:.0%})  identical={identical}")
+    print(f"[obs-overhead] closed loop (calibrate+health): {closed:.2f}s "
+          f"-> +{closed_overhead:.1%} (same bar); "
+          f"{cal_state['observations']} obs, "
+          f"{cal_state['updates']} factor updates, {len(alerts)} alerts")
     print(f"[obs-overhead] exports: {sum(cats.values())} spans "
           f"({cats}), {len(metrics['series'])} metric series, "
           f"{len(audit_lines)} audit records, calibration n={cal.get('n')}")
@@ -136,6 +173,9 @@ def main():
                         "(digest mismatch on vs off)")
     if overhead > OVERHEAD_MAX:
         failures.append(f"recording overhead {overhead:.1%} > "
+                        f"{OVERHEAD_MAX:.0%} bar")
+    if closed_overhead > OVERHEAD_MAX:
+        failures.append(f"closed-loop overhead {closed_overhead:.1%} > "
                         f"{OVERHEAD_MAX:.0%} bar")
     if not audit_lines:
         failures.append("audit log empty")

@@ -9,7 +9,10 @@ repeats.  This cache memoizes search results keyed on
 
     (workflow, remaining-stage suffix, batch bucket, penalty signature)
 
-plus the G_SLO budget — and the budget axis is quantized into exactly
+— the scheduler appends a fifth axis, the online calibrator's published
+correction-factor tuple, whenever calibration is active (any factor
+!= 1.0), so every published calibration step makes previously cached
+plans unreachable rather than stale — plus the G_SLO budget — and the budget axis is quantized into exactly
 three *sound* buckets, derived from the structure of ESG_1Q's output as
 a function of the budget (the result is a step function of G_SLO, and
 two of its steps have certifiable extents):

@@ -197,6 +197,23 @@ class ProfileTable:
                 self.job_costs + self.rates * penalty_ms / 3.6e6
                 / self.batch_sizes)
 
+    def scaled(self, factor: float) -> "ProfileTable":
+        """Multiplicative exec-time rescale — the online calibrator's
+        priced-arrays-compatible hook (``repro.obs.calibrate``).  Every
+        config's latency scales by ``factor`` and so does its per-job
+        cost (billed cost is $-rate x exec time, so cost honestly
+        tracks the corrected runtime).  A positive factor preserves the
+        time sort order and the job-cost argmin, so ESG_1Q's dual-blade
+        pruning, ``pareto()`` filtering and the dominator split all
+        operate on the corrected table unchanged.  Factor 1.0 returns
+        ``self`` — the uncalibrated fast path stays allocation-free."""
+        if factor == 1.0:
+            return self
+        if factor <= 0.0:
+            raise ValueError(f"scale factor must be positive, got {factor}")
+        return ProfileTable(self.fn, list(self.configs),
+                            self.times * factor, self.job_costs * factor)
+
     def with_penalty(self, penalty_ms: float) -> "ProfileTable":
         """Price a per-stage start penalty (a Torpor-style weight swap-in
         the placement is predicted to pay) into both A* blades: every

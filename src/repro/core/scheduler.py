@@ -26,7 +26,12 @@ two things: the emulator's placement ranks fallback invokers by the
 restart penalty their warm state implies (see ``ClusterSim._place``),
 and the planner prices the *predicted* Torpor-style swap-in penalty of
 each remaining stage into the A* search (``esg_1q(penalties_ms=...)``)
-so dual-blade pruning compares true latencies.  Only the swap component
+so dual-blade pruning compares true latencies.  With an online
+calibrator attached (``calibrator=``, see ``repro.obs.calibrate``) the
+suffix tables are additionally rescaled by the per-(app, stage) EWMA
+correction factors learned from the audit stream, and the factor tuple
+becomes an extra plan-cache key axis so no stale plan survives a
+calibration step.  Only the swap component
 is priced — when some invoker still holds the function's weights hot the
 penalty is zero, and cold-start container provisioning stays out of the
 plan exactly as in the legacy planner — so with unbounded HBM (where
@@ -60,12 +65,20 @@ class ESGScheduler(SchedulerPolicy):
                  k: int = 5, group_size: int = 3,
                  pareto: bool = False, risk_sigma: float = 0.0,
                  placement: str = "locality",
-                 plan_cache: bool = True, vectorized: bool = True):
+                 plan_cache: bool = True, vectorized: bool = True,
+                 calibrator=None):
         if placement not in ("locality", "memory"):
             raise ValueError(f"ESG placement must be 'locality' or "
                              f"'memory', got {placement!r}")
         self.placement = placement
         self.tables = tables
+        # online profile calibration (repro.obs.calibrate): when set,
+        # every plan prices the suffix against per-stage corrected
+        # tables and folds the published factor tuple into its plan-
+        # cache key — None (the default) is the uncorrected legacy path
+        self.calibrator = calibrator
+        self._cal_version = -1
+        self._scaled: dict[tuple, list[ProfileTable]] = {}
         self.k = k
         self.pareto = pareto
         self.vectorized = vectorized
@@ -160,9 +173,39 @@ class ESGScheduler(SchedulerPolicy):
             margin = sum(self.tables[f].fn.input_mb * 8.0 + 25.0
                          for f in funcs)
             quota = self._norm_quota(app, group, stage)
-            ctx = (funcs, base, margin, quota)
+            ctx = (stages, funcs, base, margin, quota)
             self._ctx[key] = ctx
         return ctx
+
+    # -- online calibration (repro.obs.calibrate) ---------------------------
+    def _factors(self, app_name: str, stages) -> Optional[tuple]:
+        """Published correction factors for the plan suffix, or None on
+        the uncorrected path (no calibrator, or every factor 1.0 — the
+        warmup gate keeps a cold calibrator bit-identical to none)."""
+        cal = self.calibrator
+        if cal is None:
+            return None
+        if cal.version != self._cal_version:
+            # a published-factor change: drop memoized scaled tables so
+            # the next plan rebuilds them against the new corrections
+            self._cal_version = cal.version
+            self._scaled.clear()
+        if not cal.active:
+            # nothing published yet: skip the per-plan factor-tuple
+            # build — with accurate profiles this is every plan
+            return None
+        f = cal.factors(app_name, stages)
+        return f if any(x != 1.0 for x in f) else None
+
+    def _corrected(self, app_name: str, stage: str, bucket: int,
+                   tables: list[ProfileTable],
+                   factors: tuple) -> list[ProfileTable]:
+        key = (app_name, stage, bucket, factors)
+        got = self._scaled.get(key)
+        if got is None:
+            got = self._scaled[key] = [
+                t.scaled(f) for t, f in zip(tables, factors)]
+        return got
 
     @staticmethod
     def _bucket(table: ProfileTable, n: int) -> int:
@@ -220,13 +263,15 @@ class ESGScheduler(SchedulerPolicy):
         # decision below reads it
         rec = getattr(sim, "recorder", None)
         auditing = rec is not None and rec.enabled and rec.audit is not None
-        funcs, base, margin, quota = self._stage_ctx(app, stage)
+        stages, funcs, base, margin, quota = self._stage_ctx(app, stage)
         w = max(now - j.inst.arrival_ms for j in jobs)
         slo = max(j.inst.slo_ms for j in jobs)
         if w >= slo:
             # deadline already lost: the SLO miss is sunk — serve at the
             # globally cost-optimal config (paper's "ensure progress";
             # Config(1,1,1) would pin a 76B model to one chip for minutes)
+            # (calibration is multiplicative per stage, so the job-cost
+            # argmin — and hence this config — is factor-invariant)
             if auditing:
                 rec.on_plan_result(PlanRecord(
                     t_ms=now, app=app.name, stage=stage, n_jobs=len(jobs),
@@ -240,6 +285,14 @@ class ESGScheduler(SchedulerPolicy):
 
         bucket = self._bucket(base[0], max(len(jobs), 1))
         tables = self._prepared(app.name, stage, base, bucket)
+        # online calibration: plan against per-stage corrected tables;
+        # the residual-penalty discount below then uses corrected
+        # min_times too (the calibrated prediction of how much of a
+        # prefetch the predecessor's execution hides)
+        factors = self._factors(app.name, stages)
+        if factors is not None:
+            tables = self._corrected(app.name, stage, bucket, tables,
+                                     factors)
         # memory-aware mode: price each remaining stage's predicted
         # weight-swap penalty into the search so the configPQ is ranked
         # by true (swap-inclusive) latency and cost
@@ -247,9 +300,14 @@ class ESGScheduler(SchedulerPolicy):
         stats = SearchStats() if auditing else None
         if self.cache is not None:
             pen_key = tuple(penalties) if penalties is not None else None
+            # the factor tuple is a cache-key axis: a published
+            # correction changes the key, so plans cached under the old
+            # factors can never serve a calibrated lookup (stale-plan
+            # invalidation by unreachability)
+            key = (app.name, stage, bucket, pen_key) if factors is None \
+                else (app.name, stage, bucket, pen_key, factors)
             results = self.cache.lookup(
-                (app.name, stage, bucket, pen_key), g_slo, tables, penalties,
-                stats=stats)
+                key, g_slo, tables, penalties, stats=stats)
             regime = self.cache.last_regime
         else:
             results = esg_1q(tables, g_slo, k=self.k, penalties_ms=penalties,
@@ -287,7 +345,7 @@ class ESGScheduler(SchedulerPolicy):
         entries all return None, forcing the emulator to re-plan."""
         if self.cache is None or not jobs:
             return None
-        funcs, base, margin, quota = self._stage_ctx(app, stage)
+        stages, funcs, base, margin, quota = self._stage_ctx(app, stage)
         w = max(now - j.inst.arrival_ms for j in jobs)
         slo = max(j.inst.slo_ms for j in jobs)
         if w >= slo:
@@ -296,7 +354,15 @@ class ESGScheduler(SchedulerPolicy):
         g_slo = max((remaining * quota - margin) / self.time_inflation, 1.0)
         bucket = self._bucket(base[0], max(len(jobs), 1))
         tables = self._prepared(app.name, stage, base, bucket)
+        # mirror plan() exactly: the certificate must be keyed under the
+        # same factor axis, so a calibration step (new factors -> new
+        # key) silently invalidates outstanding sparse-skip certificates
+        factors = self._factors(app.name, stages)
+        if factors is not None:
+            tables = self._corrected(app.name, stage, bucket, tables,
+                                     factors)
         penalties = self._penalties(sim, funcs, tables)
         pen_key = tuple(penalties) if penalties is not None else None
-        return self.cache.budget_free_token(
-            (app.name, stage, bucket, pen_key), g_slo)
+        key = (app.name, stage, bucket, pen_key) if factors is None \
+            else (app.name, stage, bucket, pen_key, factors)
+        return self.cache.budget_free_token(key, g_slo)

@@ -62,7 +62,8 @@ def emulate(setting: str = "moderate-normal", n: int = 200, seed: int = 0,
             autoscaler: str | None = None, slo_mult: float = 1.0,
             overlap: bool = False, prefetch: bool = False,
             trace_out: str | None = None, metrics_out: str | None = None,
-            audit_out: str | None = None,
+            audit_out: str | None = None, calibrate: bool = False,
+            health_out: str | None = None,
             log=print) -> dict:
     """Emulated serving over the model zoo.
 
@@ -72,9 +73,15 @@ def emulate(setting: str = "moderate-normal", n: int = 200, seed: int = 0,
     ``serving.gateway`` admission front end, with the warm-pool policy
     named by ``autoscaler`` (ewma | finegrained | vertical | none).
 
-    Any of ``trace_out`` / ``metrics_out`` / ``audit_out`` attaches the
-    flight recorder (``repro.obs``) and exports the Perfetto trace /
-    metrics time-series / planner audit log after the run.
+    Any of ``trace_out`` / ``metrics_out`` / ``audit_out`` /
+    ``health_out`` attaches the flight recorder (``repro.obs``) and
+    exports the Perfetto trace / metrics time-series / planner audit
+    log / health-alert stream after the run.  ``calibrate=True`` closes
+    the pricing loop: an online ``ProfileCalibrator`` subscribed to the
+    audit stream corrects the planner's exec estimates per (app, stage)
+    as the run progresses, and ``health_out`` additionally wires the
+    SLO health engine's alerts into the gateway's admission check and
+    the autoscaler's congestion hooks.
     """
     from repro.serving import Gateway, get_autoscaler, get_scenario
 
@@ -83,19 +90,40 @@ def emulate(setting: str = "moderate-normal", n: int = 200, seed: int = 0,
     sched = _make_scheduler(scheduler, tables)
     scaler = get_autoscaler(autoscaler) if autoscaler else None
     recorder = None
-    if trace_out or metrics_out or audit_out:
-        from repro.obs import Recorder
-        recorder = Recorder()
+    health = None
+    if trace_out or metrics_out or audit_out or calibrate or health_out:
+        from repro.obs import HealthEngine, ProfileCalibrator, Recorder
+        if health_out is not None:
+            health = HealthEngine()
+        # calibration consumes the audit stream, so the audit log is on
+        # whenever either consumer needs it
+        recorder = Recorder(health=health)
+        if calibrate:
+            if not hasattr(sched, "calibrator"):
+                raise SystemExit(f"--calibrate requires the ESG scheduler "
+                                 f"(got {scheduler!r})")
+            sched.calibrator = ProfileCalibrator().attach(recorder.audit)
     sim = ClusterSim(ZOO_APPS, tables, profiles, sched, seed=seed,
                      autoscaler=scaler, overlap=overlap, prefetch=prefetch,
                      recorder=recorder)
+    if health is not None and scaler is not None:
+        scaler.health = health
 
     def _export():
         if recorder is None:
             return
-        written = recorder.export(trace_out, metrics_out, audit_out)
+        written = recorder.export(trace_out, metrics_out, audit_out,
+                                  health_out)
         for kind, path in written.items():
             log(f"[obs] wrote {kind} -> {path}")
+        cal = getattr(sched, "calibrator", None)
+        if cal is not None:
+            log(f"[obs] calibration: {cal.observations} observations, "
+                f"{cal.updates} published factor updates")
+        if health is not None:
+            hs = health.summary()
+            log(f"[obs] health: {hs['alerts_total']} alert transitions, "
+                f"active={hs['active'] or 'none'}")
 
     if scenario is None:
         generate(sim, setting, n, profiles, seed=seed + 1)
@@ -106,7 +134,7 @@ def emulate(setting: str = "moderate-normal", n: int = 200, seed: int = 0,
             f"sched_ovh={s['mean_sched_overhead_ms']:.2f}ms")
         _export()
         return s
-    gw = Gateway(sim)
+    gw = Gateway(sim, health=health)
     sc = get_scenario(scenario, app_names=list(ZOO_APPS))
     gw.inject(sc, n, seed=seed + 1, slo_mult=slo_mult)
     tel = gw.run()
@@ -236,6 +264,14 @@ def main():
     ap.add_argument("--audit-out", default=None, metavar="PATH",
                     help="record the planner decision audit log "
                          "and write JSONL here")
+    ap.add_argument("--calibrate", action="store_true",
+                    help="close the pricing loop: correct the planner's "
+                         "exec estimates online from the audit stream's "
+                         "predicted-vs-realized records (ESG only)")
+    ap.add_argument("--health-out", default=None, metavar="PATH",
+                    help="run the SLO burn-rate health engine (alerts "
+                         "feed the gateway + autoscaler) and write its "
+                         "alert stream as JSONL here")
     args = ap.parse_args()
     if args.real:
         serve_real(arch=args.arch, n_requests=args.n if args.n else 48)
@@ -245,7 +281,8 @@ def main():
                 autoscaler=args.autoscaler, slo_mult=args.slo_mult,
                 overlap=args.overlap, prefetch=args.prefetch,
                 trace_out=args.trace_out, metrics_out=args.metrics_out,
-                audit_out=args.audit_out)
+                audit_out=args.audit_out, calibrate=args.calibrate,
+                health_out=args.health_out)
 
 
 if __name__ == "__main__":

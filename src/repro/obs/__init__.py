@@ -17,19 +17,27 @@ flag is False: every instrumentation site guards with ``if
 rec.enabled:`` so the disabled path allocates nothing, consumes no RNG,
 and replays bit-identical to an uninstrumented build (the differential
 tests in ``tests/test_observability.py`` pin all six serving scenarios).
-Recording never feeds back into scheduling either — an enabled recorder
-changes no decision, cost or SLO outcome.
+Recording never feeds back into scheduling by itself — an enabled
+recorder changes no decision, cost or SLO outcome.  Feedback is opt-in
+and explicit: a :class:`~repro.obs.calibrate.ProfileCalibrator`
+subscribed to the audit stream and handed to ``ESGScheduler``, and/or a
+:class:`~repro.obs.health.HealthEngine` (``Recorder(health=...)``)
+whose alerts the gateway and autoscaler may consume.  With neither
+attached, recorded runs replay bit-identically.
 """
 from __future__ import annotations
 
 from typing import Any, Optional
 
 from repro.obs.audit import AuditLog, PlanRecord, SkipRecord
+from repro.obs.calibrate import ProfileCalibrator
+from repro.obs.health import AlertRecord, HealthEngine
 from repro.obs.metrics import COUNTER, GAUGE, HIST, MetricsBus
 from repro.obs.tracer import SpanTracer
 
 __all__ = ["Recorder", "NullRecorder", "NULL_RECORDER", "SpanTracer",
-           "MetricsBus", "AuditLog", "PlanRecord", "SkipRecord"]
+           "MetricsBus", "AuditLog", "PlanRecord", "SkipRecord",
+           "ProfileCalibrator", "HealthEngine", "AlertRecord"]
 
 
 class NullRecorder:
@@ -56,11 +64,22 @@ class Recorder:
     enabled = True
 
     def __init__(self, trace: bool = True, metrics: bool = True,
-                 audit: bool = True, window_ms: float = 1000.0):
+                 audit: bool = True, window_ms: float = 1000.0,
+                 health: Optional[HealthEngine] = None):
         self.tracer: Optional[SpanTracer] = SpanTracer() if trace else None
         self.metrics: Optional[MetricsBus] = \
             MetricsBus(window_ms=window_ms) if metrics else None
         self.audit: Optional[AuditLog] = AuditLog() if audit else None
+        # the health engine rides the streaming side of the bus: its
+        # per-window feeds (queue depth, cold-start and prefetch-waste
+        # counts) come out of the same snapshot the metrics gauges use
+        if health is not None and self.metrics is None:
+            raise ValueError("HealthEngine requires metrics=True (it is "
+                             "fed from the metrics windows)")
+        self.health: Optional[HealthEngine] = health
+        if health is not None and self.audit is not None:
+            health.attach_audit(self.audit)
+        self._pf_wasted_seen = 0
         # delta trackers for cumulative emulator/engine counters sampled
         # per event into windowed counter series
         self._xfer_seen = (0.0, 0.0)     # (demand_ms, prefetch_ms)
@@ -131,6 +150,8 @@ class Recorder:
                                      budget_ms, need_ms)
         if self.metrics:
             self.metrics.inc("shed", now)
+        if self.health:
+            self.health.on_shed(inst.app.name, now)
 
     # ------------------------------------------------------------------
     # emulator lifecycle
@@ -163,11 +184,21 @@ class Recorder:
                     if v > cell[3]:
                         cell[3] = v
         if self.audit:
+            # predicted from the *controller's* view (the planner's
+            # ProfileTable, which may diverge from the emulator's ground
+            # truth under injected skew or drift), split into the raw
+            # profile estimate and the planner's working prediction
+            # (raw x the calibrator's published correction + penalty) —
+            # identical when no calibrator is attached
+            app_name = task.jobs[0].inst.app.name
+            raw = sim.tables[task.func].fn.exec_ms(task.config)
+            cal = getattr(sim.sched, "calibrator", None)
+            f = cal.factor(app_name, task.stage) \
+                if cal is not None and cal.active else 1.0
             self.audit.on_dispatch(
-                task.jobs[0].inst.app.name, task.stage, task.tid,
-                task.config,
-                predicted_ms=sim.profiles[task.func].exec_ms(task.config)
-                + task.penalty_ms)
+                app_name, task.stage, task.tid, task.config,
+                predicted_ms=raw * f + task.penalty_ms,
+                predicted_raw_ms=raw)
 
     def on_task_complete(self, sim, task):
         now = sim.now
@@ -186,7 +217,14 @@ class Recorder:
                 if v > cell[3]:
                     cell[3] = v
         if self.audit:
-            self.audit.on_complete(task.tid, now - task.start_ms)
+            self.audit.on_complete(task.tid, now - task.start_ms,
+                                   realized_exec_ms=now - task.exec_start_ms)
+        if self.health:
+            for job in task.jobs:
+                inst = job.inst
+                if inst.done and inst.finish_ms == now:
+                    ok = inst.finish_ms - inst.arrival_ms <= inst.slo_ms
+                    self.health.on_request(inst.app.name, now, ok)
         if self.tracer:
             args = {"stage": task.stage, "func": task.func,
                     "config": task.config, "tier": task.tier,
@@ -264,6 +302,7 @@ class Recorder:
         # cluster-wide gauges: first event of each window snapshots them
         if win == self._last_win:
             return
+        prev_win = self._last_win
         self._last_win = win
         used = 0
         hbm = demand = pref = 0.0
@@ -274,7 +313,8 @@ class Recorder:
             demand += eng.demand_ms
             pref += eng.prefetch_ms
         total = self._total_slices
-        self._g_depth[win] = sum(len(q) for q in sim.queues.values())
+        depth = sum(len(q) for q in sim.queues.values())
+        self._g_depth[win] = depth
         self._g_running[win] = len(sim.running)
         self._g_slices[win] = used
         self._g_util[win] = used / total if total else 0.0
@@ -289,6 +329,16 @@ class Recorder:
             dp = self._m_xfer_p
             dp[win] = dp.get(win, 0.0) + (pref - p0)
         self._xfer_seen = (demand, pref)
+        if self.health is not None:
+            # anomaly feeds: the just-closed window's cold-start count,
+            # the wasted-prefetch delta since the last snapshot, and the
+            # instantaneous queue depth
+            wasted = sum(dev.stats.prefetch_wasted
+                         for dev in self._devices)
+            self.health.on_window(now, depth,
+                                  self._m_cold.get(prev_win, 0.0),
+                                  wasted - self._pf_wasted_seen)
+            self._pf_wasted_seen = wasted
 
     def on_plan_timed(self, sim):
         if self.metrics:
@@ -304,7 +354,8 @@ class Recorder:
 
     def export(self, trace_path: Optional[str] = None,
                metrics_path: Optional[str] = None,
-               audit_path: Optional[str] = None) -> dict[str, Any]:
+               audit_path: Optional[str] = None,
+               health_path: Optional[str] = None) -> dict[str, Any]:
         out: dict[str, Any] = {}
         if trace_path and self.tracer:
             out["trace"] = trace_path
@@ -315,4 +366,7 @@ class Recorder:
         if audit_path and self.audit:
             out["audit"] = audit_path
             self.audit.export_jsonl(audit_path)
+        if health_path and self.health:
+            out["health"] = health_path
+            self.health.export_jsonl(health_path)
         return out

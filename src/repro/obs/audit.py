@@ -14,13 +14,27 @@ This is the layer that makes a mispriced plan *visible*: the
 error quantiles (surfaced through ``Telemetry.summary()``), and the
 JSONL export lets a single bad decision be traced from its budget and
 regime to the task it produced.
+
+The audit log is also a *stream*: ``subscribe(fn)`` registers a
+callback invoked once per plan record the moment its realized latency
+back-fills at task completion.  That is the hook the online profile
+calibrator (``repro.obs.calibrate``) and the SLO health engine's
+calibration-drift detector (``repro.obs.health``) consume — they see
+each predicted-vs-realized pair in simulated-time order, online, with
+no post-hoc scan.
 """
 from __future__ import annotations
 
 import dataclasses
 import json
 from collections import defaultdict
-from typing import Any, Optional
+from typing import Any, Callable, Optional
+
+# quantiles computed from a single sample are that sample, not a
+# distribution — below this count the per-stage calibration block
+# reports them as None so downstream consumers cannot mistake one
+# noisy observation for a p90
+MIN_QUANTILE_SAMPLES = 2
 
 
 @dataclasses.dataclass
@@ -44,6 +58,13 @@ class PlanRecord:
     config: Optional[Any] = None     # the dispatched Config (JSON: nested)
     predicted_ms: Optional[float] = None   # this stage, dispatched config
     realized_ms: Optional[float] = None    # start -> end, noise + resizes
+    # raw (uncorrected) profile estimate of the exec component alone and
+    # the realized exec span (exec_start -> end) — the multiplicative
+    # signal the online calibrator learns from: realized_exec_ms /
+    # predicted_raw_ms is the profile's error free of swap penalties and
+    # of whatever correction the planner already applied
+    predicted_raw_ms: Optional[float] = None
+    realized_exec_ms: Optional[float] = None
 
 
 @dataclasses.dataclass
@@ -64,6 +85,14 @@ class AuditLog:
         # calls plan() then dispatches at most one task from its result
         self._pending: dict[tuple[str, str], PlanRecord] = {}
         self._by_tid: dict[int, PlanRecord] = {}
+        # realized-record stream: called once per record when its
+        # realized latency back-fills (see module docstring)
+        self._subscribers: list[Callable[[PlanRecord], None]] = []
+
+    def subscribe(self, fn: Callable[[PlanRecord], None]) -> None:
+        """Register ``fn`` to receive each plan record the moment its
+        realized latency is back-filled at task completion."""
+        self._subscribers.append(fn)
 
     # ---- recording ---------------------------------------------------------
     def on_plan(self, rec: PlanRecord) -> PlanRecord:
@@ -72,19 +101,26 @@ class AuditLog:
         return rec
 
     def on_dispatch(self, app: str, stage: str, tid: int, config: Any,
-                    predicted_ms: float):
+                    predicted_ms: float,
+                    predicted_raw_ms: Optional[float] = None):
         rec = self._pending.pop((app, stage), None)
         if rec is None:
             return
         rec.task_tid = tid
         rec.config = config
         rec.predicted_ms = predicted_ms
+        rec.predicted_raw_ms = predicted_raw_ms
         self._by_tid[tid] = rec
 
-    def on_complete(self, tid: int, realized_ms: float):
+    def on_complete(self, tid: int, realized_ms: float,
+                    realized_exec_ms: Optional[float] = None):
         rec = self._by_tid.pop(tid, None)
-        if rec is not None:
-            rec.realized_ms = realized_ms
+        if rec is None:
+            return
+        rec.realized_ms = realized_ms
+        rec.realized_exec_ms = realized_exec_ms
+        for fn in self._subscribers:
+            fn(rec)
 
     def on_skip(self, t_ms: float, app: str, stage: str, certificate: Any,
                 recheck: int):
@@ -104,6 +140,11 @@ class AuditLog:
         Relative error is (realized - predicted) / predicted: positive
         means the plan was optimistic (exec noise, resizes, contention),
         negative pessimistic.  Per-(app, stage) plus an overall block.
+        Every per-stage block carries its sample count ``n`` next to the
+        quantiles, and below ``MIN_QUANTILE_SAMPLES`` the quantiles are
+        reported as None — a "p90" of one sample is that sample, and
+        consumers (the calibrator's warmup gate, dashboards) must be
+        able to tell the difference.
         """
         per: dict[str, list[float]] = defaultdict(list)
         for rec in self.plans:
@@ -117,17 +158,21 @@ class AuditLog:
         for key in sorted(per):
             errs = sorted(per[key])
             all_errs.extend(errs)
+            quantiled = len(errs) >= MIN_QUANTILE_SAMPLES
             out[key] = {
                 "n": len(errs),
                 "mean_err": sum(errs) / len(errs),
-                "p50_err": self._quantile(errs, 0.50),
+                "mean_abs_err": sum(abs(e) for e in errs) / len(errs),
+                "p50_err": self._quantile(errs, 0.50) if quantiled else None,
                 "p90_abs_err": self._quantile(sorted(abs(e) for e in errs),
-                                              0.90),
+                                              0.90) if quantiled else None,
             }
         all_errs.sort()
         return {
             "n": len(all_errs),
             "mean_err": (sum(all_errs) / len(all_errs)) if all_errs else 0.0,
+            "mean_abs_err": (sum(abs(e) for e in all_errs) / len(all_errs))
+            if all_errs else 0.0,
             "p50_err": self._quantile(all_errs, 0.50) if all_errs else 0.0,
             "p90_abs_err": self._quantile(
                 sorted(abs(e) for e in all_errs), 0.90) if all_errs else 0.0,

@@ -51,6 +51,11 @@ def _register(cls):
 class AutoscalerPolicy:
     """Warm-pool policy interface driven by the cluster emulator."""
     name = "base"
+    # optional SLO health engine (repro.obs.health): policies may read
+    # ``self.health.early_warning()`` as a congestion early-warning —
+    # e.g. VerticalFineGrained withholds opportunistic quota grows
+    # while an alert is firing.  None (the default) changes nothing.
+    health = None
 
     def seed_pools(self, sim) -> None:
         """Populate initial warm pools (sim.invokers exist, sim.now == 0)."""
@@ -323,6 +328,12 @@ class VerticalFineGrained(FineGrained):
     def _grow(self, sim, inv_idx: int):
         if self._queued(sim):
             return                      # queued work gets the slices instead
+        if self.health is not None and self.health.early_warning():
+            # a firing alert (SLO burn, queue buildup, cold-start spike)
+            # predicts imminent queued work: keep the idle slices free
+            # for it instead of granting them to running tasks — the
+            # shrink path would only claw them back a resize later
+            return
         inv = sim.invokers[inv_idx]
         free = inv.device.free_slices
         for task in self._running_on(sim, inv_idx):   # latest finisher first

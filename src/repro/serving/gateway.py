@@ -41,12 +41,22 @@ class Gateway:
 
     def __init__(self, sim, telemetry: Optional[Telemetry] = None,
                  shed_doomed: bool = True, backlog_aware: bool = True,
-                 qdelay_alpha: float = 0.3):
+                 qdelay_alpha: float = 0.3, health=None,
+                 health_headroom: float = 1.5):
         self.sim = sim
         self.telemetry = telemetry if telemetry is not None else Telemetry()
         self.shed_doomed = shed_doomed
         self.backlog_aware = backlog_aware
         self.qdelay_alpha = qdelay_alpha
+        # SLO health engine (repro.obs.health): while an alert relevant
+        # to the arriving app is firing, the predicted-queueing term is
+        # inflated by ``health_headroom`` — the EWMA lags exactly when
+        # the burn-rate/queue-buildup detectors say conditions are
+        # deteriorating, so admission turns pessimistic early instead
+        # of queueing doomed work through the whole burn.  None (the
+        # default) changes nothing.
+        self.health = health
+        self.health_headroom = health_headroom
         # per-(app, stage) EWMA of realized queueing delay
         self._qdelay: dict[tuple[str, str], float] = {}
         self._tasks_seen = 0
@@ -95,7 +105,11 @@ class Gateway:
         if self.shed_doomed:
             budget = inst.deadline_ms - sim.now
             fastest = self._fastest_ms[inst.app.name]
-            need = fastest + self.predicted_queueing_ms(inst.app)
+            queueing = self.predicted_queueing_ms(inst.app)
+            if self.health is not None \
+                    and self.health.early_warning(inst.app.name):
+                queueing *= self.health_headroom
+            need = fastest + queueing
             if need > budget:
                 self.telemetry.on_shed(inst.app.name, t_ms=sim.now,
                                        budget_ms=budget, need_ms=need,

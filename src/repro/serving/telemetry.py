@@ -150,9 +150,15 @@ class Telemetry:
         self.shed_false = 0
         self.shed_unknown = 0
         # planner-audit calibration (predicted vs realized per-stage
-        # latency error quantiles), filled by collect() when the sim
-        # carries an enabled flight recorder with an audit log
+        # latency error quantiles, each block carrying its sample count
+        # ``n`` — quantiles are None below 2 samples), filled by
+        # collect() when the sim carries an enabled flight recorder
+        # with an audit log
         self.predicted_vs_realized: dict[str, Any] = {}
+        # online-calibrator factor state (repro.obs.calibrate) and SLO
+        # health-engine alert summary (repro.obs.health), when attached
+        self.calibration: dict[str, Any] = {}
+        self.health: dict[str, Any] = {}
 
     # ---- gateway-side ------------------------------------------------------
     def on_injected(self, app: str):
@@ -204,9 +210,15 @@ class Telemetry:
             self.slo_hits += int(lat <= inst.slo_ms)
         self._score_sheds(sim)
         rec = getattr(sim, "recorder", None)
-        if rec is not None and getattr(rec, "enabled", False) \
-                and getattr(rec, "audit", None) is not None:
-            self.predicted_vs_realized = rec.calibration()
+        if rec is not None and getattr(rec, "enabled", False):
+            if getattr(rec, "audit", None) is not None:
+                self.predicted_vs_realized = rec.calibration()
+            health = getattr(rec, "health", None)
+            if health is not None:
+                self.health = health.summary()
+        cal = getattr(sim.sched, "calibrator", None)
+        if cal is not None:
+            self.calibration = cal.summary()
         return self
 
     def _score_sheds(self, sim) -> None:
@@ -302,6 +314,8 @@ class Telemetry:
             "prefetch_hit_rate": self.prefetch_hit_rate(),
             "penalty_hidden_frac": self.penalty_hidden_frac(),
             "predicted_vs_realized": dict(self.predicted_vs_realized),
+            "calibration": dict(self.calibration),
+            "health": dict(self.health),
             "gpu": dict(self.gpu),
             "latency": self.e2e.to_dict(),
             "per_stage": {

@@ -249,8 +249,8 @@ def test_audit_unit_lifecycle():
     audit.on_complete(999, 5.0)
     assert audit.calibration()["n"] == 1
     assert AuditLog().calibration() == {
-        "n": 0, "mean_err": 0.0, "p50_err": 0.0, "p90_abs_err": 0.0,
-        "per_stage": {}}
+        "n": 0, "mean_err": 0.0, "mean_abs_err": 0.0, "p50_err": 0.0,
+        "p90_abs_err": 0.0, "per_stage": {}}
 
 
 # ---------------------------------------------------------------------------
