@@ -42,7 +42,8 @@ import numpy as np
 from repro.core.profiles import (Config, FunctionProfile, ProfileTable,
                                  VCPU_PRICE_PER_H, VGPU_PRICE_PER_H)
 from repro.core.workflows import Workflow
-from repro.gpu import COLD, DeviceModel, SLICES_PER_VGPU
+from repro.gpu import (COLD, DEFAULT_SKU, DeviceModel, GpuSKU,
+                       SLICES_PER_VGPU, resolve_sku)
 from repro.obs import NULL_RECORDER
 
 KEEPALIVE_MS = 600_000.0          # OpenWhisk 10-minute keep-alive
@@ -73,6 +74,11 @@ class AppInstance:
     done: bool = False
     finish_ms: float = -1.0
     plan: Any = None                  # Orion/Aquatope static plans
+    # --- preemptible-fleet bookkeeping ---
+    failed: bool = False              # shed mid-flight after repeated reclaims
+    # stage -> fraction of exec completed at the last kill (stages with
+    # ``checkpoint_mb`` resume from here instead of re-running from start)
+    ckpt_frac: dict = dataclasses.field(default_factory=dict)
 
     @property
     def deadline_ms(self) -> float:
@@ -109,6 +115,8 @@ class Task:
     # --- overlapped-swap accounting ---
     penalty_ms: float = 0.0      # restart penalty actually charged
     full_penalty_ms: float = 0.0  # what the additive model would charge
+    # --- preemptible-fleet accounting ---
+    preempted: bool = False      # killed mid-task by a spot reclamation
 
     @property
     def quota_vgpu(self) -> float:
@@ -128,15 +136,28 @@ class Invoker:
                  hbm_per_vgpu_mb: Optional[float] = None,
                  footprints: Optional[dict[str, float]] = None,
                  shared_weights: bool = False,
-                 overlap: bool = False):
+                 overlap: bool = False,
+                 sku: Optional[GpuSKU] = None):
         self.idx = idx
         self.vcpus = vcpus
         self.vgpus = vgpus
         self.free_vcpu = vcpus
         self.footprints = footprints or {}
-        self.device = DeviceModel(vgpus, hbm_per_vgpu_mb=hbm_per_vgpu_mb,
+        self.sku = sku if sku is not None else DEFAULT_SKU
+        # exec times are divided by the SKU's throughput rate; the vGPU
+        # billing component scales with its $/slice-hour factor.  Both
+        # are 1.0 on the default SKU (bit-identical arithmetic).
+        self.exec_slowdown = 1.0 / self.sku.exec_rate
+        self.price_factor = self.sku.price_factor
+        # spot lifecycle: draining between reclamation warning and the
+        # kill, down during the post-reclaim outage
+        self.down = False
+        self.draining = False
+        hbm = (self.sku.hbm_per_vgpu_mb
+               if self.sku.hbm_per_vgpu_mb is not None else hbm_per_vgpu_mb)
+        self.device = DeviceModel(vgpus, hbm_per_vgpu_mb=hbm,
                                   shared_weights=shared_weights,
-                                  overlap=overlap)
+                                  overlap=overlap, sku=self.sku)
         # optional sim hook observing new keep-alive expiries (the
         # event-sparse emulator's expiry watermark)
         self.note_expiry: Optional[Callable[[float], None]] = None
@@ -152,11 +173,15 @@ class Invoker:
 
     def fits(self, c: Config, func: Optional[str] = None,
              now: float = 0.0) -> bool:
+        if self.down or self.draining:
+            return False
         return self.free_vcpu >= c.vcpu and self.device.fits(
             c.vgpu * SLICES_PER_VGPU,
             self.model_mb(func) if func else 0.0, func, now)
 
     def add_warm(self, func: str, expiry: float, now: float = 0.0):
+        if self.down or self.draining:
+            return               # nothing survives on a doomed device
         self.device.add_warm(func, expiry, self.model_mb(func), now)
         if self.note_expiry is not None:
             self.note_expiry(expiry)
@@ -247,7 +272,11 @@ class ClusterSim:
                  overlap: bool = False,
                  prefetch: bool = False,
                  sparse: bool = True,
-                 recorder: Any = None):
+                 recorder: Any = None,
+                 fleet: Optional[list] = None,
+                 reclaim_storms: Optional[list[tuple]] = None,
+                 max_retries: int = 4,
+                 retry_backoff_ms: float = 250.0):
         self.apps = apps
         self.tables = tables
         self.profiles = profiles
@@ -279,14 +308,35 @@ class ClusterSim:
         self._cap_dirty = True
         footprints = {n: getattr(p, "model_mb", 0.0)
                       for n, p in profiles.items()}
+        # heterogeneous / preemptible fleet: ``fleet`` is a list of SKU
+        # names (or GpuSKU objects) assigned round-robin across the
+        # invokers.  None — or any spelling that resolves to the neutral
+        # DEFAULT_SKU everywhere, e.g. ["a100"] * n — keeps every code
+        # path arithmetically identical to the homogeneous emulator.
+        skus = ([resolve_sku(s) for s in fleet] if fleet
+                else [DEFAULT_SKU])
+        assigned = [skus[i % len(skus)] for i in range(n_invokers)]
+        self._hetero = any(s != DEFAULT_SKU for s in assigned)
+        self._has_spot = any(s.spot for s in assigned)
         self.invokers = [Invoker(i, vcpus, vgpus,
                                  hbm_per_vgpu_mb=hbm_per_vgpu_mb,
                                  footprints=footprints,
                                  shared_weights=shared_weights,
-                                 overlap=overlap)
+                                 overlap=overlap,
+                                 sku=assigned[i])
                          for i in range(n_invokers)]
         for inv in self.invokers:
             inv.note_expiry = self._note_expiry
+        # spot-reclamation machinery (inert without a spot SKU): seeded
+        # reclaim schedule, retry policy, planner-facing fleet signature
+        self.seed = seed
+        self.reclaim_storms = [tuple(w) for w in (reclaim_storms or [])]
+        self.max_retries = max_retries
+        self.retry_backoff_ms = retry_backoff_ms
+        self.prefer_on_demand = False
+        self._sku_sig: Any = None
+        self._reclaims_seeded = False
+        self._retry_counts: dict[tuple[int, str], int] = {}
         # flight recorder (repro.obs): the default null object carries
         # only ``enabled = False`` and every hook site guards on it, so
         # the disabled path does no work and replays bit-identically
@@ -339,6 +389,15 @@ class ClusterSim:
         # starts vs what the additive model would have charged
         self.penalty_charged_ms = 0.0
         self.penalty_full_ms = 0.0
+        # preemptible-fleet accounting
+        self.reclaim_warnings = 0
+        self.reclaims = 0
+        self.recoveries = 0
+        self.preemptions = 0          # running tasks killed mid-flight
+        self.retries = 0              # retry/resume re-dispatches scheduled
+        self.preempt_shed = 0         # instances shed after max_retries
+        self.preempt_lost_ms = 0.0    # execution time lost to kills
+        self.migrations = 0           # warm containers drained-and-migrated
 
     # ---- events ----------------------------------------------------------
     def push_event(self, t: float, kind: str, payload: Any):
@@ -350,6 +409,8 @@ class ClusterSim:
 
     # ---- main loop -------------------------------------------------------
     def run(self):
+        if self._has_spot and not self._reclaims_seeded:
+            self._seed_reclaims()
         while self._events:
             t, _, kind, payload = heapq.heappop(self._events)
             self.now = max(self.now, t)
@@ -361,6 +422,16 @@ class ClusterSim:
                     continue             # stale: task was resized since
                 self._on_complete(task)
                 self._blocked.clear()        # capacity changed: retry queues
+            elif kind == "reclaim_warning":
+                self._on_reclaim_warning(payload)
+            elif kind == "reclaim":
+                self._on_reclaim(payload)
+                self._blocked.clear()        # capacity changed either way
+            elif kind == "recover":
+                self._on_recover(payload)
+                self._blocked.clear()
+            elif kind == "retry":
+                self._on_retry(payload)
             elif kind == "prewarm":
                 func, inv = payload
                 dev = self.invokers[inv].device
@@ -438,6 +509,204 @@ class ClusterSim:
                     continue
             self._blocked.discard(key)
 
+    # ---- spot reclamation -------------------------------------------------
+    def _storm_mult(self, t: float) -> float:
+        """Reclamation-rate multiplier at time ``t`` (storm windows are
+        ``(t0_ms, t1_ms, mult)`` tuples; outside every window it is 1)."""
+        for t0, t1, mult in self.reclaim_storms:
+            if t0 <= t < t1:
+                return max(float(mult), 1e-9)
+        return 1.0
+
+    def _seed_reclaims(self) -> None:
+        """Draw each spot invoker's reclamation schedule up front from a
+        dedicated seeded stream (never ``self.rng`` — its draw order is
+        bit-identity-critical for dispatch noise).  Gaps are exponential
+        with the SKU's mean, shrunk by the storm multiplier in effect at
+        the gap's start; each reclaim announces itself ``warn_ms`` ahead.
+        The horizon is bounded by the last already-queued event plus a
+        tail margin, so the event loop always drains."""
+        self._reclaims_seeded = True
+        horizon = max((e[0] for e in self._events), default=0.0) + 60_000.0
+        for inv in self.invokers:
+            sku = inv.sku
+            if not sku.spot or sku.reclaim_mean_s <= 0.0:
+                continue
+            rng = np.random.default_rng([self.seed, 7919, inv.idx])
+            t = float(self.now)
+            while True:
+                mean_ms = sku.reclaim_mean_s * 1000.0 / self._storm_mult(t)
+                t += float(rng.exponential(mean_ms))
+                if t > horizon:
+                    break
+                self.push_event(max(t - sku.warn_ms, self.now),
+                                "reclaim_warning", inv.idx)
+                self.push_event(t, "reclaim", inv.idx)
+
+    def sku_signature(self) -> Optional[tuple]:
+        """Planner-facing fleet signature, folded into plan-cache keys
+        and used to price SKU speed + preemption risk into both ESG_1Q
+        blades.  None on a homogeneous default fleet (tables and cache
+        keys stay untouched — the bit-identical replay guarantee);
+        otherwise ``(exec_factor, risk_per_ms)`` over the currently-up
+        invokers, recomputed lazily after every reclaim/warning/recover.
+
+        ``exec_factor`` is the slice-weighted mean exec-time multiplier
+        (1/exec_rate); ``risk_per_ms`` approximates the fleet-level
+        reclamation hazard a dispatched task faces per running ms
+        (spot capacity share x mean reclaim rate)."""
+        if not self._hetero:
+            return None
+        sig = self._sku_sig
+        if sig is not None:
+            return sig
+        up = [inv for inv in self.invokers
+              if not inv.down and not inv.draining]
+        if not up:
+            up = list(self.invokers)
+        total = sum(inv.device.total_slices for inv in up)
+        eff = sum(inv.device.total_slices * inv.sku.exec_rate for inv in up)
+        exec_factor = (total / eff) if eff > 0.0 else 1.0
+        risk = 0.0
+        if total:
+            lam = sum(inv.device.total_slices /
+                      (inv.sku.reclaim_mean_s * 1000.0)
+                      for inv in up
+                      if inv.sku.spot and inv.sku.reclaim_mean_s > 0.0)
+            risk = lam / total
+        sig = (round(exec_factor, 6), round(risk, 12))
+        self._sku_sig = sig
+        return sig
+
+    def _on_reclaim_warning(self, inv_idx: int) -> None:
+        inv = self.invokers[inv_idx]
+        if inv.down or inv.draining:
+            return
+        inv.draining = True
+        self.reclaim_warnings += 1
+        self._sku_sig = None
+        self._cap_dirty = True
+        if self.recorder.enabled:
+            self.recorder.on_reclaim_warning(self.now, inv_idx)
+        # drain-and-migrate: the warm-pool policy re-homes the doomed
+        # invoker's keep-alive containers before the kill lands
+        self.autoscaler.on_reclaim_warning(self, inv_idx)
+
+    def _on_reclaim(self, inv_idx: int) -> None:
+        inv = self.invokers[inv_idx]
+        if inv.down:
+            return                   # already inside an outage
+        inv.draining = False
+        inv.down = True
+        self.reclaims += 1
+        self._sku_sig = None
+        killed = sorted((t for t in self.running.values()
+                         if t.invoker == inv_idx), key=lambda t: t.tid)
+        for task in killed:
+            self._kill_task(task, inv)
+        inv.device.reclaim()
+        inv.free_vcpu = inv.vcpus
+        self._refresh_min_expiry()
+        self.push_event(self.now + inv.sku.recover_ms, "recover", inv_idx)
+        if self.recorder.enabled:
+            self.recorder.on_reclaim(self.now, inv_idx, len(killed))
+
+    def _on_recover(self, inv_idx: int) -> None:
+        inv = self.invokers[inv_idx]
+        if not inv.down:
+            return
+        inv.down = False
+        inv.draining = False
+        self.recoveries += 1
+        self._sku_sig = None
+        if self.recorder.enabled:
+            self.recorder.on_recover(self.now, inv_idx)
+
+    def _kill_task(self, task: Task, inv: Invoker) -> None:
+        """Mid-task reclamation kill: stale the pending complete event,
+        release compute + HBM, refund the unexecuted billing window,
+        checkpoint progress for resumable stages, then schedule a retry
+        with exponential backoff (or shed after ``max_retries``)."""
+        now = self.now
+        task.gen += 1                    # complete event goes stale
+        self.running.pop(task.tid, None)
+        inv.free_vcpu += task.config.vcpu
+        self.slice_busy_ms += task.quota_slices * max(
+            now - task.q_since, 0.0)
+        inv.device.kill(task.alloc_id)
+        # refund the window that will never run, billed like resize_task
+        # at the current fractional-vGPU rate (SKU price factor included)
+        pivot = max(now, task.exec_start_ms)
+        unrun = max(task.end_ms - pivot, 0.0)
+        rate = task.config.vcpu * VCPU_PRICE_PER_H + \
+            task.quota_vgpu * VGPU_PRICE_PER_H * inv.price_factor
+        refund = rate * unrun / 3.6e6
+        task.cost -= refund
+        self.total_cost -= refund
+        span = task.end_ms - task.exec_start_ms
+        frac = 0.0
+        if span > 0.0 and now > task.exec_start_ms:
+            frac = min((now - task.exec_start_ms) / span, 1.0)
+        lost = max(min(now, task.end_ms) - task.exec_start_ms, 0.0)
+        self.preemptions += 1
+        self.preempt_lost_ms += lost
+        task.end_ms = now
+        task.preempted = True
+        fp = self.profiles[task.func]
+        resumable = fp.checkpoint_mb > 0.0 and frac > 0.0
+        if self.recorder.enabled:
+            self.recorder.on_preempt(self, task, lost)
+        action = "resume" if resumable else "retry"
+        for job in task.jobs:
+            inst = job.inst
+            if inst.done or inst.failed:
+                continue
+            if resumable:
+                inst.ckpt_frac[task.stage] = max(
+                    inst.ckpt_frac.get(task.stage, 0.0), frac)
+            rkey = (inst.uid, task.stage)
+            attempt = self._retry_counts.get(rkey, 0) + 1
+            self._retry_counts[rkey] = attempt
+            if attempt > self.max_retries:
+                self._shed_inflight(inst, task.stage, task.invoker,
+                                    attempt, lost)
+                continue
+            backoff = self.retry_backoff_ms * (2.0 ** (attempt - 1))
+            self.retries += 1
+            self.push_event(now + backoff, "retry",
+                            Job(inst, task.stage, now + backoff))
+            if self.recorder.enabled:
+                self.recorder.on_retry_decision(
+                    now, inst.app.name, task.stage, inst.uid, task.invoker,
+                    attempt, action, backoff, lost)
+
+    def _shed_inflight(self, inst: AppInstance, stage: str, inv_idx: int,
+                       attempt: int, lost: float) -> None:
+        """Give up on an instance whose stage was reclaimed more than
+        ``max_retries`` times: purge its queued jobs and count it shed
+        (with an audit record), so the event loop always terminates."""
+        inst.failed = True
+        self.preempt_shed += 1
+        for skey, q in self.queues.items():
+            if skey[0] != inst.app.name or not q:
+                continue
+            kept = [j for j in q if j.inst is not inst]
+            if len(kept) != len(q):
+                q.clear()
+                q.extend(kept)
+        self.shed.append(inst)
+        if self.recorder.enabled:
+            self.recorder.on_retry_decision(
+                self.now, inst.app.name, stage, inst.uid, inv_idx,
+                attempt, "shed", 0.0, lost)
+
+    def _on_retry(self, job: Job) -> None:
+        if job.inst.done or job.inst.failed:
+            return
+        key = (job.inst.app.name, job.stage)
+        self.queues[key].append(job)
+        self._blocked.discard(key)
+
     # ---- handlers --------------------------------------------------------
     def _on_arrival(self, inst: AppInstance):
         if self.admission is not None and not self.admission(self, inst):
@@ -466,6 +735,11 @@ class ClusterSim:
         self.running.pop(task.tid, None)
         for job in task.jobs:
             inst = job.inst
+            if inst.failed:
+                continue             # shed mid-flight after reclamations
+            if self._has_spot:
+                inst.ckpt_frac.pop(task.stage, None)
+                self._retry_counts.pop((inst.uid, task.stage), None)
             inst.stage_invoker[task.stage] = task.invoker
             succs = inst.app.edges.get(task.stage, ())
             if not succs and not inst.done:
@@ -604,12 +878,27 @@ class ClusterSim:
 
     def _place(self, app: Workflow, stage: str, jobs: list[Job],
                cfg: Config) -> Optional[int]:
+        if self._has_spot and self.prefer_on_demand:
+            # burn-rate alert firing: try the reliable partition first,
+            # spill onto spot capacity only when on-demand is full
+            got = self._place_any(app, stage, jobs, cfg, spot_ok=False)
+            if got is not None:
+                return got
+        return self._place_any(app, stage, jobs, cfg)
+
+    def _place_any(self, app: Workflow, stage: str, jobs: list[Job],
+                   cfg: Config, spot_ok: bool = True) -> Optional[int]:
         func = app.func_of[stage]
+
+        def ok(inv: Invoker) -> bool:
+            return (spot_ok or not inv.sku.spot) and \
+                inv.fits(cfg, func, self.now)
+
         if self.sched.placement == "fragmentation":
             # best-fit: minimise leftover GPU after placement (INFless/FaST)
             best, best_left = None, None
             for inv in self.invokers:
-                if inv.fits(cfg, func, self.now):
+                if ok(inv):
                     left = inv.free_vgpu - cfg.vgpu
                     if best_left is None or left < best_left:
                         best, best_left = inv.idx, left
@@ -621,7 +910,7 @@ class ClusterSim:
         # is unbounded
         order = self._locality_order(app, stage, jobs)
         for idx in order:
-            if self.invokers[idx].fits(cfg, func, self.now):
+            if ok(self.invokers[idx]):
                 return idx
         if self.sched.placement == "memory":
             # weight-locality fallback: rank the remaining candidates by
@@ -632,7 +921,7 @@ class ClusterSim:
             # when the device ledger shares read-only weights
             cold_ms = self.profiles[func].cold_ms
             rest = [i for i in self.invokers
-                    if i.idx not in order and i.fits(cfg, func, self.now)]
+                    if i.idx not in order and ok(i)]
             if not rest:
                 return None
             return min(rest, key=lambda i: (
@@ -653,7 +942,7 @@ class ClusterSim:
                 if idx in probed:
                     continue
                 inv = self.invokers[idx]
-                if not inv.fits(cfg, func, self.now):
+                if not ok(inv):
                     continue
                 if inv.has_warm(func, self.now):
                     return idx
@@ -662,12 +951,12 @@ class ClusterSim:
             return first_fit
         # other warm invokers
         warm = [i for i in self.invokers
-                if i.has_warm(func, self.now) and i.fits(cfg, func, self.now)
+                if i.has_warm(func, self.now) and ok(i)
                 and i.idx not in order]
         if warm:
             return max(warm, key=lambda i: (i.free_vgpu, i.free_vcpu)).idx
         # cold invoker with most available resources
-        cold = [i for i in self.invokers if i.fits(cfg, func, self.now)]
+        cold = [i for i in self.invokers if ok(i)]
         if cold:
             return max(cold, key=lambda i: (i.free_vgpu, i.free_vcpu)).idx
         return None
@@ -698,6 +987,13 @@ class ClusterSim:
                         transfer, REMOTE_TRANSFER_FIXED_MS +
                         REMOTE_TRANSFER_MS_PER_MB * self.profiles[func].input_mb)
 
+        # warm-up-from-zero: the first start on a completely empty device
+        # of a SKU with a bring-up latency pays it on top of the tier
+        # penalty (the default SKU carries 0 and skips the probe)
+        warmup_ms = 0.0
+        if inv.sku.warmup_ms > 0.0 and inv.device.empty(self.now):
+            warmup_ms = inv.sku.warmup_ms
+
         slices = cfg.vgpu * SLICES_PER_VGPU
         if self.overlap:
             # overlapped swap pipeline: the restart penalty is a
@@ -727,6 +1023,19 @@ class ClusterSim:
         noise = float(np.clip(
             1.0 + self.rng.normal(0.0, self.noise_sigma), 0.5, 2.0))
         exec_ms = self.profiles[func].exec_ms(cfg) * noise
+        if inv.exec_slowdown != 1.0:
+            exec_ms *= inv.exec_slowdown       # SKU speed grade
+        restore_ms = 0.0
+        if self._has_spot:
+            ck = self.profiles[func].checkpoint_mb
+            if ck > 0.0:
+                frac = min(j.inst.ckpt_frac.get(stage, 0.0) for j in jobs)
+                if frac > 0.0:
+                    # resume-from-checkpoint: skip the completed fraction
+                    # of the batch's least-advanced job, pay the
+                    # checkpoint restore copy instead of a full re-run
+                    exec_ms *= (1.0 - frac)
+                    restore_ms = inv.device._swap_ms(ck)
         start = self.now + overhead_ms + transfer
         if self.overlap:
             exec_start = max(start, alloc.ready_ms)
@@ -735,11 +1044,17 @@ class ClusterSim:
         else:
             exec_start = start + penalty_ms
             charged = full = penalty_ms
+        extra = warmup_ms + restore_ms
+        if extra > 0.0:
+            exec_start += extra
+            charged += extra
+            full += extra
         end = exec_start + exec_ms
 
         inv.free_vcpu -= cfg.vcpu
         self._cap_dirty = True
-        rate = cfg.vcpu * VCPU_PRICE_PER_H + cfg.vgpu * VGPU_PRICE_PER_H
+        rate = cfg.vcpu * VCPU_PRICE_PER_H + \
+            cfg.vgpu * VGPU_PRICE_PER_H * inv.price_factor
         cost = rate * (charged + exec_ms) / 3.6e6
         self.total_cost += cost
         self.penalty_charged_ms += charged
@@ -789,10 +1104,12 @@ class ClusterSim:
             fp.exec_ms(task.config, quota_vgpu=old / SLICES_PER_VGPU)
         new_remaining = remaining * ratio
         # re-bill the remaining window at the new fractional-vGPU rate
+        # (SKU price factor included, 1.0 on the default fleet)
         old_rate = task.config.vcpu * VCPU_PRICE_PER_H + \
-            (old / SLICES_PER_VGPU) * VGPU_PRICE_PER_H
+            (old / SLICES_PER_VGPU) * VGPU_PRICE_PER_H * inv.price_factor
         new_rate = task.config.vcpu * VCPU_PRICE_PER_H + \
-            (new_slices / SLICES_PER_VGPU) * VGPU_PRICE_PER_H
+            (new_slices / SLICES_PER_VGPU) * VGPU_PRICE_PER_H \
+            * inv.price_factor
         delta = (new_rate * new_remaining - old_rate * remaining) / 3.6e6
         task.cost += delta
         self.total_cost += delta
@@ -865,4 +1182,13 @@ class ClusterSim:
             "penalty_full_ms": self.penalty_full_ms,
             "penalty_hidden_ms": self.penalty_full_ms
             - self.penalty_charged_ms,
+            # preemptible-fleet observability
+            "reclaim_warnings": self.reclaim_warnings,
+            "reclamations": self.reclaims,
+            "recoveries": self.recoveries,
+            "preemptions": self.preemptions,
+            "retries": self.retries,
+            "preempt_shed": self.preempt_shed,
+            "preempt_lost_ms": self.preempt_lost_ms,
+            "migrations": self.migrations,
         }

@@ -59,6 +59,9 @@ class FunctionProfile:
     input_mb: float              # stage input size (data-transfer model)
     cpu_frac: float = 0.2        # fraction of t1 spent on the CPU part
     model_mb: float = 0.0        # weight-checkpoint HBM footprint
+    # intermediate-state checkpoint a preempted task can resume from
+    # (0 => no checkpointing: a spot reclamation re-runs from scratch)
+    checkpoint_mb: float = 0.0
 
     def quota_factor(self, c: Config, quota_vgpu: Optional[float]) -> float:
         """GPU-part slowdown when the running container's compute quota
@@ -213,6 +216,32 @@ class ProfileTable:
             raise ValueError(f"scale factor must be positive, got {factor}")
         return ProfileTable(self.fn, list(self.configs),
                             self.times * factor, self.job_costs * factor)
+
+    def preempt_priced(self, exec_factor: float = 1.0,
+                       risk_per_ms: float = 0.0) -> "ProfileTable":
+        """Price a heterogeneous/preemptible fleet into both blades.
+
+        ``exec_factor`` is the fleet's mean exec-time multiplier (the
+        slice-weighted inverse of the SKU exec rates — >1 on a fleet
+        slower than the profiled baseline).  ``risk_per_ms`` is the
+        expected preemption-loss coefficient: a task running for T ms
+        on spot capacity expects ~``risk_per_ms * T`` reclamations'
+        worth of rework, so its effective latency inflates by
+        ``(1 + risk_per_ms * T)`` — longer configs are penalised
+        superlinearly, which is exactly the pressure that steers the
+        planner toward shorter stages under reclamation risk.  Cost
+        inflates identically (rework is billed again).  Both transforms
+        are monotone in T, so the time sort order and dual-blade
+        pruning survive.  Neutral arguments return ``self``."""
+        if exec_factor <= 0.0 or risk_per_ms < 0.0:
+            raise ValueError(
+                f"bad preemption pricing ({exec_factor}, {risk_per_ms})")
+        if exec_factor == 1.0 and risk_per_ms == 0.0:
+            return self
+        times = self.times * exec_factor
+        inflate = 1.0 + risk_per_ms * times
+        return ProfileTable(self.fn, list(self.configs), times * inflate,
+                            self.job_costs * exec_factor * inflate)
 
     def with_penalty(self, penalty_ms: float) -> "ProfileTable":
         """Price a per-stage start penalty (a Torpor-style weight swap-in

@@ -56,6 +56,14 @@ from repro.gpu import HOT, WARM, swap_in_ms
 from repro.obs import PlanRecord
 
 
+# Expected rework per unit of reclamation hazard: a mid-task kill loses
+# about half the run on average (uniform kill time), while a stage with a
+# checkpoint resumes and loses only a small restore window.  These scale
+# the fleet's ``risk_per_ms`` before it inflates the suffix tables.
+PREEMPT_LOSS_FRAC = 0.5
+CKPT_LOSS_FRAC = 0.1
+
+
 class ESGScheduler(SchedulerPolicy):
     name = "ESG"
     placement = "locality"
@@ -79,6 +87,10 @@ class ESGScheduler(SchedulerPolicy):
         self.calibrator = calibrator
         self._cal_version = -1
         self._scaled: dict[tuple, list[ProfileTable]] = {}
+        # heterogeneous/preemptible fleets: suffix tables repriced per
+        # (stage context, calibration factors, fleet signature) — the
+        # signature also becomes a plan-cache key axis (see plan())
+        self._spot_tables: dict[tuple, list[ProfileTable]] = {}
         self.k = k
         self.pareto = pareto
         self.vectorized = vectorized
@@ -207,6 +219,33 @@ class ESGScheduler(SchedulerPolicy):
                 t.scaled(f) for t, f in zip(tables, factors)]
         return got
 
+    # -- heterogeneous/preemptible fleet pricing ----------------------------
+    @staticmethod
+    def _fleet_sig(sim) -> Optional[tuple]:
+        """The emulator's SKU/spot signature, or None on a homogeneous
+        default fleet (and on sims that predate the fleet model)."""
+        fn = getattr(sim, "sku_signature", None)
+        return fn() if fn is not None else None
+
+    def _spot_priced(self, app_name: str, stage: str, bucket: int,
+                     factors: Optional[tuple], sku_sig: tuple,
+                     tables: list[ProfileTable]) -> list[ProfileTable]:
+        """Suffix tables with SKU-scaled exec times and expected
+        preemption loss priced into both ESG_1Q blades (memoized — the
+        distinct signatures over a run are the fleet's up/down
+        compositions, a handful)."""
+        key = (app_name, stage, bucket, factors, sku_sig)
+        got = self._spot_tables.get(key)
+        if got is None:
+            exec_factor, risk = sku_sig
+            got = self._spot_tables[key] = [
+                t.preempt_priced(
+                    exec_factor,
+                    risk * (CKPT_LOSS_FRAC if t.fn.checkpoint_mb > 0.0
+                            else PREEMPT_LOSS_FRAC))
+                for t in tables]
+        return got
+
     @staticmethod
     def _bucket(table: ProfileTable, n: int) -> int:
         """Quantize a batch cap to the table's lattice: restrict_batch is
@@ -293,6 +332,13 @@ class ESGScheduler(SchedulerPolicy):
         if factors is not None:
             tables = self._corrected(app.name, stage, bucket, tables,
                                      factors)
+        # heterogeneous/preemptible fleet: reprice the suffix for SKU
+        # speed and expected preemption loss (None on the default fleet,
+        # leaving tables and cache keys untouched)
+        sku_sig = self._fleet_sig(sim)
+        if sku_sig is not None:
+            tables = self._spot_priced(app.name, stage, bucket, factors,
+                                       sku_sig, tables)
         # memory-aware mode: price each remaining stage's predicted
         # weight-swap penalty into the search so the configPQ is ranked
         # by true (swap-inclusive) latency and cost
@@ -303,9 +349,13 @@ class ESGScheduler(SchedulerPolicy):
             # the factor tuple is a cache-key axis: a published
             # correction changes the key, so plans cached under the old
             # factors can never serve a calibrated lookup (stale-plan
-            # invalidation by unreachability)
+            # invalidation by unreachability); the fleet signature is
+            # another (a reclaim/recover changes the signature, making
+            # plans priced for the old fleet unreachable, PR-7 style)
             key = (app.name, stage, bucket, pen_key) if factors is None \
                 else (app.name, stage, bucket, pen_key, factors)
+            if sku_sig is not None:
+                key = key + ("sku", sku_sig)
             results = self.cache.lookup(
                 key, g_slo, tables, penalties, stats=stats)
             regime = self.cache.last_regime
@@ -361,8 +411,14 @@ class ESGScheduler(SchedulerPolicy):
         if factors is not None:
             tables = self._corrected(app.name, stage, bucket, tables,
                                      factors)
+        sku_sig = self._fleet_sig(sim)
+        if sku_sig is not None:
+            tables = self._spot_priced(app.name, stage, bucket, factors,
+                                       sku_sig, tables)
         penalties = self._penalties(sim, funcs, tables)
         pen_key = tuple(penalties) if penalties is not None else None
         key = (app.name, stage, bucket, pen_key) if factors is None \
             else (app.name, stage, bucket, pen_key, factors)
+        if sku_sig is not None:
+            key = key + ("sku", sku_sig)
         return self.cache.budget_free_token(key, g_slo)

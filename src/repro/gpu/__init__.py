@@ -11,14 +11,15 @@ model-state swap tiers).
 from repro.gpu.device import (COLD, HOT, MIN_SLICES, SLICES_PER_VGPU, WARM,
                               Allocation, DeviceModel, DeviceStats,
                               OversubscribedError, WarmContainer, WeightSet)
-from repro.gpu.footprints import (PAPER_MODEL_MB, cold_components,
+from repro.gpu.footprints import (DEFAULT_SKU, PAPER_MODEL_MB, SKU_CATALOG,
+                                  GpuSKU, cold_components, resolve_sku,
                                   swap_in_ms, tier_penalty_ms)
 from repro.gpu.transfer import DEMAND, PREFETCH, Transfer, TransferEngine
 
 __all__ = [
-    "Allocation", "COLD", "DEMAND", "DeviceModel", "DeviceStats", "HOT",
-    "MIN_SLICES", "OversubscribedError", "PAPER_MODEL_MB", "PREFETCH",
-    "SLICES_PER_VGPU", "Transfer", "TransferEngine", "WARM",
-    "WarmContainer", "WeightSet", "cold_components", "swap_in_ms",
-    "tier_penalty_ms",
+    "Allocation", "COLD", "DEFAULT_SKU", "DEMAND", "DeviceModel",
+    "DeviceStats", "GpuSKU", "HOT", "MIN_SLICES", "OversubscribedError",
+    "PAPER_MODEL_MB", "PREFETCH", "SKU_CATALOG", "SLICES_PER_VGPU",
+    "Transfer", "TransferEngine", "WARM", "WarmContainer", "WeightSet",
+    "cold_components", "resolve_sku", "swap_in_ms", "tier_penalty_ms",
 ]

@@ -58,8 +58,9 @@ import math
 from collections import Counter, defaultdict
 from typing import Optional
 
-from repro.gpu.footprints import (COLD, HOT, WARM, cold_components,
-                                  swap_in_ms, tier_penalty_ms)
+from repro.gpu.footprints import (COLD, DEFAULT_SKU, HOT, WARM, GpuSKU,
+                                  cold_components, swap_in_ms,
+                                  tier_penalty_ms)
 from repro.gpu.transfer import Transfer, TransferEngine
 
 # Quota lattice resolution: 1/4 vGPU.  The scheduler's integer-vGPU
@@ -143,7 +144,11 @@ class DeviceModel:
                  hbm_per_vgpu_mb: Optional[float] = None,
                  slices_per_vgpu: int = SLICES_PER_VGPU,
                  shared_weights: bool = False,
-                 overlap: bool = False):
+                 overlap: bool = False,
+                 sku: Optional[GpuSKU] = None):
+        self.sku = sku if sku is not None else DEFAULT_SKU
+        # per-SKU host->HBM bandwidth feeds every swap/cold-load figure
+        self._gbps = self.sku.h2d_gbps
         self.vgpus = vgpus
         self.slices_per_vgpu = slices_per_vgpu
         self.total_slices = vgpus * slices_per_vgpu
@@ -178,6 +183,10 @@ class DeviceModel:
         """Oversize checkpoints (> device HBM) run in streaming mode and
         pin the whole device rather than making placement infeasible."""
         return min(model_mb, self.hbm_total_mb)
+
+    def _swap_ms(self, model_mb: float) -> float:
+        """``footprints.swap_in_ms`` at this device's SKU bandwidth."""
+        return swap_in_ms(model_mb, self._gbps)
 
     # ---- warm-pool upkeep -------------------------------------------------
     def _gc(self, now: float) -> None:
@@ -394,8 +403,8 @@ class DeviceModel:
                        for c in self._hot(func)]
                 return min(res) if res else 0.0
             if tier == WARM:
-                return swap_in_ms(model_mb)   # demand copy from host RAM
-            prov, w = cold_components(model_mb, cold_ms)
+                return self._swap_ms(model_mb)   # demand copy from host RAM
+            prov, w = cold_components(model_mb, cold_ms, self._gbps)
             if self.shared_weights and self._resident(func):
                 # peer-resident weights: the boot waits only for
                 # provisioning — or for the peer's copy still in flight
@@ -405,8 +414,8 @@ class DeviceModel:
         if tier == COLD and self.shared_weights and self._resident(func):
             if cold_ms is None:
                 return 0.0
-            return max(cold_ms - swap_in_ms(model_mb), 0.0)
-        return tier_penalty_ms(tier, model_mb, cold_ms)
+            return max(cold_ms - self._swap_ms(model_mb), 0.0)
+        return tier_penalty_ms(tier, model_mb, cold_ms, self._gbps)
 
     # ---- container lifecycle ---------------------------------------------
     def start(self, func: str, slices: int, model_mb: float,
@@ -470,9 +479,9 @@ class DeviceModel:
                 tier = WARM
                 self.stats.warm_hits += 1
                 self.stats.swap_ins += 1
-                self.stats.swap_in_ms += swap_in_ms(model_mb)
+                self.stats.swap_in_ms += self._swap_ms(model_mb)
                 if self.overlap:
-                    full = swap_in_ms(model_mb)
+                    full = self._swap_ms(model_mb)
                     ready = self.engine.demand(func, full, now).done_ms
             else:
                 tier = COLD
@@ -480,7 +489,7 @@ class DeviceModel:
                 if self.overlap:
                     # container provisioning (CPU-side) overlaps the
                     # weight copy on the PCIe engine
-                    prov, w = cold_components(model_mb, cold_ms)
+                    prov, w = cold_components(model_mb, cold_ms, self._gbps)
                     wdone = (self.engine.demand(func, w, now).done_ms
                              if w > 0.0 else now)
                     ready, full = max(now + prov, wdone), prov + w
@@ -526,7 +535,7 @@ class DeviceModel:
         """Overlap timeline of a shared-weights attach (runs after
         ``_attach_shared`` settled tier and HBM accounting)."""
         ws = self._ws(func)
-        w_full = swap_in_ms(model_mb)
+        w_full = self._swap_ms(model_mb)
         if tier == HOT:
             return self._ready_of(ws, now)
         if tier == WARM:
@@ -535,7 +544,7 @@ class DeviceModel:
             ws.prefetched = False
             ws.transfer = self.engine.demand(func, w_full, now)
             return ws.transfer.done_ms, w_full
-        prov, w = cold_components(model_mb, cold_ms)
+        prov, w = cold_components(model_mb, cold_ms, self._gbps)
         if was_resident:
             # peer-resident weights (PR-3 discount): the cold boot waits
             # only for provisioning — or for the peer's copy in flight
@@ -578,7 +587,7 @@ class DeviceModel:
                 tier = WARM
                 self.stats.warm_hits += 1
                 self.stats.swap_ins += 1
-                self.stats.swap_in_ms += swap_in_ms(model_mb)
+                self.stats.swap_in_ms += self._swap_ms(model_mb)
             else:
                 tier = COLD
                 self.stats.cold_misses += 1
@@ -627,6 +636,55 @@ class DeviceModel:
         self.check()
         return c
 
+    # ---- spot reclamation -------------------------------------------------
+    def kill(self, aid: int) -> Allocation:
+        """Reclamation kill: drop a *running* allocation without parking
+        a keep-alive container — unlike :meth:`stop`, the container and
+        its pinned weights die with the device.  In shared mode the run
+        pin is released and the weight set is freed once nothing else
+        references it."""
+        a = self.allocs.pop(aid)
+        self.used_slices -= a.slices
+        if self.shared_weights:
+            ws = self._ws(a.func)
+            ws.run_refs -= 1
+            if ws.run_refs <= 0 and ws.warm_refs <= 0:
+                self.hbm_used_mb -= ws.mb
+                self._abandon_transfer(ws)
+                del self.weights[a.func]
+        else:
+            self.hbm_used_mb -= a.hbm_mb
+        self.check()
+        return a
+
+    def reclaim(self) -> None:
+        """The device vanished (spot reclamation): wipe every keep-alive
+        pool, weight set and in-flight transfer.  Running allocations
+        must have been :meth:`kill`-ed first; afterwards the HBM ledger
+        reads zero and ``check()`` still holds, so a later recovery
+        restarts from a genuinely cold device."""
+        if self.allocs:
+            raise OversubscribedError(
+                f"reclaim() with {len(self.allocs)} live allocations")
+        for pool in self.pools.values():
+            for c in pool:
+                self.hbm_used_mb -= c.hbm_mb
+                self._abandon_transfer(c)
+            pool.clear()
+        for func in list(self.weights):
+            ws = self.weights.pop(func)
+            self.hbm_used_mb -= ws.mb
+            self._abandon_transfer(ws)
+        self.check()
+
+    def empty(self, now: float) -> bool:
+        """No running allocation and no live keep-alive container — the
+        next start on a SKU with ``warmup_ms`` pays the warm-up-from-zero
+        latency."""
+        self._gc(now)
+        return not self.allocs and \
+            not any(pool for pool in self.pools.values())
+
     # ---- warm-pool API (autoscalers / emulator) ---------------------------
     def add_warm(self, func: str, expiry: float, model_mb: float,
                  now: float = 0.0) -> WarmContainer:
@@ -648,11 +706,11 @@ class DeviceModel:
                 repromote = any(e.tier == WARM for e in self.pools[func])
                 if repromote:
                     self.stats.swap_ins += 1
-                    self.stats.swap_in_ms += swap_in_ms(model_mb)
+                    self.stats.swap_in_ms += self._swap_ms(model_mb)
                 self._load_shared(func, model_mb)
-                if self.overlap and repromote and swap_in_ms(model_mb) > 0:
+                if self.overlap and repromote and self._swap_ms(model_mb) > 0:
                     self._ws(func).transfer = self.engine.prefetch(
-                        func, swap_in_ms(model_mb), now)
+                        func, self._swap_ms(model_mb), now)
                 c = WarmContainer(func, expiry, 0.0, HOT)
                 self.stats.hbm_peak_mb = max(self.stats.hbm_peak_mb,
                                              self.hbm_used_mb)
@@ -691,7 +749,7 @@ class DeviceModel:
         need = self._capped(model_mb)
         if need > self.free_hbm_mb:
             return False
-        w = swap_in_ms(model_mb)
+        w = self._swap_ms(model_mb)
         if w <= 0.0:
             return False
         tr = self.engine.prefetch(func, w, now)

@@ -29,7 +29,7 @@ from __future__ import annotations
 
 from typing import Any, Optional
 
-from repro.obs.audit import AuditLog, PlanRecord, SkipRecord
+from repro.obs.audit import AuditLog, PlanRecord, RetryRecord, SkipRecord
 from repro.obs.calibrate import ProfileCalibrator
 from repro.obs.health import AlertRecord, HealthEngine
 from repro.obs.metrics import COUNTER, GAUGE, HIST, MetricsBus
@@ -37,7 +37,8 @@ from repro.obs.tracer import SpanTracer
 
 __all__ = ["Recorder", "NullRecorder", "NULL_RECORDER", "SpanTracer",
            "MetricsBus", "AuditLog", "PlanRecord", "SkipRecord",
-           "ProfileCalibrator", "HealthEngine", "AlertRecord"]
+           "RetryRecord", "ProfileCalibrator", "HealthEngine",
+           "AlertRecord"]
 
 
 class NullRecorder:
@@ -268,6 +269,63 @@ class Recorder:
     def on_retire(self, now: float):
         if self.metrics:
             self.metrics.inc("retires", now)
+
+    # ------------------------------------------------------------------
+    # preemptible fleet (spot reclamations)
+    # ------------------------------------------------------------------
+    def on_reclaim_warning(self, now: float, inv_idx: int):
+        if self.metrics:
+            self.metrics.inc("reclaim_warnings", now)
+        if self.tracer:
+            self.tracer.reclaim_instant(inv_idx, now, "reclaim_warning")
+
+    def on_reclaim(self, now: float, inv_idx: int, n_killed: int):
+        if self.metrics:
+            self.metrics.inc("reclamations", now)
+        if self.tracer:
+            self.tracer.reclaim_instant(inv_idx, now, "reclaim",
+                                        {"killed_tasks": n_killed})
+
+    def on_recover(self, now: float, inv_idx: int):
+        if self.metrics:
+            self.metrics.inc("recoveries", now)
+        if self.tracer:
+            self.tracer.reclaim_instant(inv_idx, now, "recover")
+
+    def on_preempt(self, sim, task, lost_ms: float):
+        """A running task was killed mid-execution by a reclamation."""
+        now = sim.now
+        if self.metrics:
+            self.metrics.inc("preemptions", now)
+            if lost_ms > 0.0:
+                self.metrics.inc("preempt_lost_ms", now, lost_ms)
+        if self.audit:
+            # the partial run must never back-fill calibration
+            self.audit.on_preempted(task.tid)
+        if self.tracer:
+            args = {"stage": task.stage, "func": task.func,
+                    "invoker": task.invoker, "config": task.config,
+                    "lost_ms": lost_ms}
+            for job in task.jobs:
+                self.tracer.preempt_span(job.inst.uid, task.stage,
+                                         task.start_ms, now, args)
+
+    def on_retry_decision(self, now: float, app: str, stage: str, uid: int,
+                          invoker: int, attempt: int, action: str,
+                          backoff_ms: float, lost_ms: float):
+        if self.audit:
+            self.audit.on_retry(now, app, stage, uid, invoker, attempt,
+                                action, backoff_ms, lost_ms)
+        if self.metrics:
+            self.metrics.inc(
+                "preempt_shed" if action == "shed" else "retries", now)
+
+    def on_migrate(self, now: float, inv_idx: int, moved: int):
+        if self.metrics and moved:
+            self.metrics.inc("migrations", now, moved)
+        if self.tracer:
+            self.tracer.reclaim_instant(inv_idx, now, "migrate",
+                                        {"moved": moved})
 
     # ------------------------------------------------------------------
     # device / transfer engine

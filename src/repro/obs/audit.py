@@ -7,7 +7,10 @@ counts — zero on a cache hit), the chosen path's predicted latency/cost
 against its G_SLO budget, and, back-filled when the dispatched task
 completes, the realized stage latency next to the predicted one.  Plus
 one :class:`SkipRecord` per event-sparse ``sparse_skips`` decision,
-naming the plan-signature certificate that proved the retry futile.
+naming the plan-signature certificate that proved the retry futile, and
+one :class:`RetryRecord` per retry decision taken after a spot
+reclamation killed a running task (retry / resume-from-checkpoint /
+shed, with attempt count, backoff and lost execution time).
 
 This is the layer that makes a mispriced plan *visible*: the
 ``calibration()`` block aggregates per-stage predicted-vs-realized
@@ -77,10 +80,31 @@ class SkipRecord:
     recheck: int                     # recheck counter at skip time
 
 
+@dataclasses.dataclass
+class RetryRecord:
+    """One retry decision after a spot reclamation killed a running task.
+
+    ``action`` is what the emulator decided for this job: ``retry``
+    (re-run from scratch after ``backoff_ms``), ``resume`` (restart from
+    the stage's checkpoint) or ``shed`` (retry budget exhausted, the
+    request failed).  ``lost_ms`` is the execution time destroyed by the
+    kill, attributed to every job of the killed task."""
+    t_ms: float
+    app: str
+    stage: str
+    uid: int                         # request the retried job belongs to
+    invoker: int                     # reclaimed invoker
+    attempt: int                     # 1-based attempt count for this stage
+    action: str                      # retry|resume|shed
+    backoff_ms: float                # delay before the re-queue (0 for shed)
+    lost_ms: float                   # exec time destroyed by the kill
+
+
 class AuditLog:
     def __init__(self):
         self.plans: list[PlanRecord] = []
         self.skips: list[SkipRecord] = []
+        self.retries: list[RetryRecord] = []
         # most recent un-dispatched record per (app, stage): the emulator
         # calls plan() then dispatches at most one task from its result
         self._pending: dict[tuple[str, str], PlanRecord] = {}
@@ -126,6 +150,20 @@ class AuditLog:
                 recheck: int):
         self.skips.append(SkipRecord(t_ms, app, stage, str(certificate),
                                      recheck))
+
+    def on_preempted(self, tid: int):
+        """A running task was killed by a reclamation: drop its pending
+        back-fill so the partial run never reaches the calibration stream
+        (a kill is not a latency observation)."""
+        self._by_tid.pop(tid, None)
+
+    def on_retry(self, t_ms: float, app: str, stage: str, uid: int,
+                 invoker: int, attempt: int, action: str,
+                 backoff_ms: float, lost_ms: float) -> RetryRecord:
+        rec = RetryRecord(t_ms, app, stage, uid, invoker, attempt, action,
+                          backoff_ms, lost_ms)
+        self.retries.append(rec)
+        return rec
 
     # ---- analysis ----------------------------------------------------------
     @staticmethod
@@ -187,7 +225,7 @@ class AuditLog:
 
     # ---- export ------------------------------------------------------------
     def export_jsonl(self, path: str) -> int:
-        """One JSON object per line: plan records then skip records."""
+        """One JSON object per line: plan, then skip, then retry records."""
         n = 0
         with open(path, "w") as f:
             for rec in self.plans:
@@ -198,6 +236,11 @@ class AuditLog:
             for skip in self.skips:
                 f.write(json.dumps({"type": "skip",
                                     **dataclasses.asdict(skip)},
+                                   sort_keys=True, default=str) + "\n")
+                n += 1
+            for retry in self.retries:
+                f.write(json.dumps({"type": "retry",
+                                    **dataclasses.asdict(retry)},
                                    sort_keys=True, default=str) + "\n")
                 n += 1
         return n

@@ -133,6 +133,21 @@ class SpanTracer:
             yield _Span(f"exec:{stage}", "exec", exec_start_ms, end_ms,
                         pid, args)
 
+    def preempt_span(self, uid: int, stage: str, t0_ms: float, t1_ms: float,
+                     args: dict):
+        """A stage execution killed by a spot reclamation: the span covers
+        task start -> kill, so the lost work is visible on the request's
+        track right where the retry's queue span begins."""
+        self._spans.append(_Span(f"preempt:{stage}", "preempt", t0_ms,
+                                 t1_ms, self.request_pid(uid), args))
+
+    def reclaim_instant(self, device: int, t_ms: float, name: str,
+                        args: Optional[dict] = None):
+        """Reclamation lifecycle marker (warning / reclaim / recover) on
+        the device's own track."""
+        self._instants.append(_Instant(
+            name, "reclaim", t_ms, self.device_pid(device), args))
+
     def resize_instant(self, uid: int, t_ms: float, invoker: int,
                        old_slices: int, new_slices: int):
         self._instants.append(_Instant(

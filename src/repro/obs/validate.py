@@ -17,8 +17,9 @@ roles, so any mix of artifacts can be passed in any order:
     ``.csv``) — known series kinds, well-formed points (scalar kinds
     carry one value, hist windows carry count/sum/min/max with
     min <= max <= sum consistency), strictly increasing window starts;
-  * **planner audit** (``.jsonl`` of plan/skip records) — required
-    fields per record type, numeric sanity, realized >= 0;
+  * **planner audit** (``.jsonl`` of plan/skip/retry records) —
+    required fields per record type, numeric sanity, realized >= 0,
+    retry actions in retry|resume|shed with attempt >= 1;
   * **health alerts** (``.jsonl`` of alert records) — known alert
     kinds, firing/cleared states alternating per (kind, app) stream.
 
@@ -38,6 +39,9 @@ _METRIC_KINDS = ("counter", "gauge", "hist")
 _AUDIT_PLAN_FIELDS = ("t_ms", "app", "stage", "n_jobs", "g_slo_ms",
                       "regime", "expansions")
 _AUDIT_SKIP_FIELDS = ("t_ms", "app", "stage", "certificate", "recheck")
+_AUDIT_RETRY_FIELDS = ("t_ms", "app", "stage", "uid", "invoker", "attempt",
+                       "action", "backoff_ms", "lost_ms")
+_RETRY_ACTIONS = ("retry", "resume", "shed")
 _ALERT_FIELDS = ("t_ms", "kind", "app", "state", "value", "threshold")
 
 
@@ -198,15 +202,17 @@ def validate_audit(records: list[dict[str, Any]],
                    path: str = "audit") -> dict[str, int]:
     """Validate planner-audit JSONL records; returns per-type counts.
     Errors name the file and 0-based record index."""
-    counts = {"plan": 0, "skip": 0}
+    counts = {"plan": 0, "skip": 0, "retry": 0}
+    fields_by_type = {"plan": _AUDIT_PLAN_FIELDS,
+                      "skip": _AUDIT_SKIP_FIELDS,
+                      "retry": _AUDIT_RETRY_FIELDS}
     for i, r in enumerate(records):
         t = r.get("type")
         if t not in counts:
             raise ValueError(f"{path}: record {i}: bad type {t!r} "
-                             f"(want plan|skip)")
+                             f"(want plan|skip|retry)")
         counts[t] += 1
-        fields = _AUDIT_PLAN_FIELDS if t == "plan" else _AUDIT_SKIP_FIELDS
-        missing = [k for k in fields if k not in r]
+        missing = [k for k in fields_by_type[t] if k not in r]
         if missing:
             raise ValueError(f"{path}: record {i}: {t} record missing "
                              f"{missing}")
@@ -218,6 +224,19 @@ def validate_audit(records: list[dict[str, Any]],
                 v = r.get(k)
                 if v is not None and (not _num(v) or v < 0):
                     raise ValueError(f"{path}: record {i}: bad {k} {v!r}")
+        elif t == "retry":
+            if r["action"] not in _RETRY_ACTIONS:
+                raise ValueError(
+                    f"{path}: record {i}: bad retry action "
+                    f"{r['action']!r} (want one of {_RETRY_ACTIONS})")
+            if not isinstance(r["attempt"], int) or \
+                    isinstance(r["attempt"], bool) or r["attempt"] < 1:
+                raise ValueError(f"{path}: record {i}: bad attempt "
+                                 f"{r['attempt']!r} (want int >= 1)")
+            for k in ("backoff_ms", "lost_ms"):
+                if not _num(r[k]) or r[k] < 0:
+                    raise ValueError(f"{path}: record {i}: bad {k} "
+                                     f"{r[k]!r}")
     return counts
 
 
@@ -270,7 +289,8 @@ def _dispatch(path: str) -> str:
                 f"{k}={n}" for k, n in sorted(counts.items()))
                 or "0 alerts")
         counts = validate_audit(records, path)
-        return f"audit OK: {counts['plan']} plans, {counts['skip']} skips"
+        return (f"audit OK: {counts['plan']} plans, {counts['skip']} "
+                f"skips, {counts['retry']} retries")
     with open(path) as f:
         doc = json.load(f)
     if isinstance(doc, dict) and "traceEvents" in doc:

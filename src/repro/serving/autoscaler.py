@@ -77,6 +77,37 @@ class AutoscalerPolicy:
         retries placement once; False to let the queue block."""
         return False
 
+    def on_reclaim_warning(self, sim, inv_idx: int) -> None:
+        """Drain-and-migrate: a spot invoker announced its reclamation.
+        The default policy re-homes every live keep-alive container of
+        the doomed invoker onto surviving invokers (spread order, which
+        prefers on-demand SKUs while a burn-rate alert is firing) so the
+        warm capacity — not the running tasks, those are killed at the
+        reclaim — survives the outage.  Policies may override for
+        smarter draining; the hook only fires on fleets with spot SKUs,
+        so default runs never enter it."""
+        from repro.cluster.emulator import KEEPALIVE_MS
+        doomed = sim.invokers[inv_idx]
+        moved = 0
+        for func in sorted(doomed.device.pools):
+            entries = doomed.device.warm_entries(func, sim.now)
+            if not entries:
+                continue
+            targets = [i for i in self.spread_order(sim, func)
+                       if i.idx != inv_idx and not i.down
+                       and not i.draining]
+            if not targets:
+                continue
+            for j, _ in enumerate(entries):
+                targets[j % len(targets)].add_warm(
+                    func, sim.now + KEEPALIVE_MS, sim.now)
+                moved += 1
+        if moved:
+            sim.migrations += moved
+            rec = getattr(sim, "recorder", None)
+            if rec is not None and rec.enabled:
+                rec.on_migrate(sim.now, inv_idx, moved)
+
     def prefetch(self, sim, app, stage: str, inv_idx: int) -> int:
         """Predictive next-stage weight prefetch (the Torpor lever,
         called by the emulator when ``sim.prefetch_weights`` is on):
@@ -114,6 +145,11 @@ class AutoscalerPolicy:
             cold_ms = sim.profiles[func].cold_ms
             order.sort(key=lambda i: i.start_penalty_ms(func, cold_ms,
                                                         sim.now))
+        if getattr(sim, "prefer_on_demand", False):
+            # burn-rate alert firing: stable re-sort puts reliable
+            # on-demand SKUs ahead of preemptible spot capacity (no-op
+            # on homogeneous fleets — every key is False)
+            order.sort(key=lambda i: i.sku.spot)
         return order
 
 

@@ -102,6 +102,11 @@ class Gateway:
         recording = rec is not None and rec.enabled
         if recording:
             rec.on_injected(inst.app.name, sim.now)
+        if self.health is not None and getattr(sim, "_has_spot", False):
+            # While any burn-rate/queue-buildup alert is firing, steer new
+            # placements off spot capacity: reclamation rework is the last
+            # thing a burning SLO needs.  Clears itself when alerts clear.
+            sim.prefer_on_demand = bool(self.health.early_warning())
         if self.shed_doomed:
             budget = inst.deadline_ms - sim.now
             fastest = self._fastest_ms[inst.app.name]

@@ -19,6 +19,9 @@ Catalogue (``SCENARIOS``):
   * ``skewed-mix``  — uniform arrivals but an 80/20 per-app traffic mix.
   * ``trace-replay`` — replay a recorded ``(t_ms, app)`` CSV (real
     Azure/production traces; see ``benchmarks/traces/``).
+  * ``spot-storm``  — steady Poisson arrivals plus supply-side
+    reclamation-storm windows for preemptible fleets.
+  * ``hetero-mix``  — MMPP bursts aimed at a mixed-SKU fleet.
 
 Add a scenario by subclassing ``Scenario`` (override ``_interval``, or
 ``arrivals`` for non-generative sources) and registering a factory in
@@ -317,6 +320,64 @@ class TraceReplayScenario(Scenario):
         return out
 
 
+class SpotStormScenario(Scenario):
+    """Steady exponential arrivals for preemptible-fleet stress tests.
+
+    The arrival process itself is plain Poisson — the *storms* are on the
+    supply side: ``storm_windows(horizon_ms)`` returns ``(t0, t1, mult)``
+    windows during which spot reclamation rates should be multiplied
+    (feed them to ``ClusterSim(reclaim_storms=...)``).  Two storms cover
+    the middle of the horizon so retries, migration and backoff all get
+    exercised while load is still arriving.  ``suggested_fleet(n)``
+    mixes on-demand anchors with spot capacity (2 on-demand : 1 spot).
+    """
+    name = "spot-storm"
+
+    def __init__(self, mean_interval_ms: float = 35.0,
+                 storm_mult: float = 6.0, **kw):
+        super().__init__(**kw)
+        self.mean_interval_ms = mean_interval_ms
+        self.storm_mult = storm_mult
+
+    def _interval(self, rng, i, t_ms):
+        return rng.exponential(self.mean_interval_ms)
+
+    def storm_windows(self, horizon_ms: float) -> list[tuple[float, float, float]]:
+        """Two reclamation storms in the middle half of the horizon."""
+        return [
+            (0.25 * horizon_ms, 0.40 * horizon_ms, self.storm_mult),
+            (0.60 * horizon_ms, 0.75 * horizon_ms, self.storm_mult),
+        ]
+
+    @staticmethod
+    def suggested_fleet(n_invokers: int) -> list[str]:
+        """2 on-demand : 1 spot round-robin mix."""
+        cycle = ("a100", "a100", "a100-spot")
+        return [cycle[i % len(cycle)] for i in range(n_invokers)]
+
+
+class HeteroMixScenario(MMPPScenario):
+    """Bursty (MMPP) traffic aimed at a heterogeneous SKU mix.
+
+    Arrival-side it is the 2-state MMPP process; the point of the
+    scenario is ``suggested_fleet(n)``: a rotation over the whole SKU
+    catalogue (fast H100s, baseline A100s, and the cheap spot tiers) so
+    SKU-aware pricing, warm-up-from-zero and exec-rate scaling all see
+    traffic in one run.
+    """
+    name = "hetero-mix"
+
+    def __init__(self, mean_interval_ms: float = 35.0,
+                 burst_factor: float = 6.0, p_switch: float = 0.04, **kw):
+        super().__init__(mean_interval_ms=mean_interval_ms,
+                         burst_factor=burst_factor, p_switch=p_switch, **kw)
+
+    @staticmethod
+    def suggested_fleet(n_invokers: int) -> list[str]:
+        cycle = ("a100", "h100", "a100-spot", "a100", "a10g-spot")
+        return [cycle[i % len(cycle)] for i in range(n_invokers)]
+
+
 # Built-in sample: a quiet->burst->quiet day fragment (wildcard apps are
 # remapped onto whatever app set the run serves).
 DEFAULT_TRACE_ROWS: list[tuple[float, str]] = [
@@ -343,6 +404,8 @@ SCENARIOS: dict[str, Callable[..., Scenario]] = {
     "skewed-mix": lambda **kw: UniformScenario(
         20.0, 33.6, **{"app_weights": None, **kw}),
     "trace-replay": TraceReplayScenario,
+    "spot-storm": SpotStormScenario,
+    "hetero-mix": HeteroMixScenario,
 }
 
 

@@ -547,6 +547,61 @@ def test_validate_audit_names_offending_record(tmp_path, tables):
     assert "audit.jsonl" in str(ei.value) and "record 3" in str(ei.value)
 
 
+def _retry_rec(**over):
+    rec = {"type": "retry", "t_ms": 5.0, "app": "image_classification",
+           "stage": "0:super_resolution", "uid": 7, "invoker": 2,
+           "attempt": 1, "action": "retry", "backoff_ms": 250.0,
+           "lost_ms": 12.5}
+    rec.update(over)
+    return rec
+
+
+def test_validate_audit_counts_retry_records():
+    recs = [_retry_rec(), _retry_rec(attempt=2, action="resume"),
+            _retry_rec(attempt=3, action="shed", backoff_ms=0.0)]
+    assert validate_audit(recs, "audit.jsonl")["retry"] == 3
+
+
+def test_validate_audit_rejects_bad_retry_action():
+    recs = [_retry_rec(), _retry_rec(action="requeue")]
+    with pytest.raises(ValueError) as ei:
+        validate_audit(recs, "audit.jsonl")
+    msg = str(ei.value)
+    assert "audit.jsonl" in msg and "record 1" in msg
+    assert "requeue" in msg and "retry" in msg
+
+
+def test_validate_audit_rejects_bad_retry_attempt():
+    for attempt in (0, -1, 1.5, True, "first"):
+        with pytest.raises(ValueError) as ei:
+            validate_audit([_retry_rec(attempt=attempt)], "audit.jsonl")
+        msg = str(ei.value)
+        assert "record 0" in msg and "attempt" in msg
+
+
+def test_validate_audit_rejects_negative_retry_costs():
+    for field in ("backoff_ms", "lost_ms"):
+        with pytest.raises(ValueError) as ei:
+            validate_audit([_retry_rec(**{field: -1.0})], "audit.jsonl")
+        msg = str(ei.value)
+        assert "record 0" in msg and field in msg
+
+
+def test_validate_audit_names_missing_retry_fields():
+    rec = _retry_rec()
+    del rec["uid"], rec["action"]
+    with pytest.raises(ValueError) as ei:
+        validate_audit([rec], "bad_audit.jsonl")
+    msg = str(ei.value)
+    assert "bad_audit.jsonl" in msg and "record 0" in msg
+    assert "uid" in msg and "action" in msg
+
+
+def test_validate_audit_bad_type_mentions_retry():
+    with pytest.raises(ValueError, match=r"plan\|skip\|retry"):
+        validate_audit([{"type": "redo", "t_ms": 1.0}], "audit.jsonl")
+
+
 def test_validate_health_rejects_double_fire(tmp_path):
     recs = [{"type": "alert", "t_ms": 1.0, "kind": SLO_BURN, "app": "a",
              "state": FIRING, "value": 3.0, "threshold": 2.0},

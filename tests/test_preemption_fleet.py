@@ -1,0 +1,698 @@
+"""Heterogeneous preemptible fleets: spot GPUs, mid-task reclamation,
+and the fault-injection harness (PR 8).
+
+Five layers of protection:
+
+  * **neutrality** — every serving scenario replays bit-identically
+    between the default configuration and any spelling of a single-SKU,
+    no-spot fleet (``fleet=["a100"] * n``): the fleet machinery must be
+    arithmetically invisible until a non-default SKU appears;
+  * **unit semantics** — the SKU catalogue, ``preempt_priced`` pricing
+    transform, device ``kill``/``reclaim``/``empty`` ledger operations,
+    warm-up-from-zero, exec-rate scaling and spot billing discounts;
+  * **fault injection** — seeded reclamation storms kill running tasks
+    mid-execution; property-style random walks assert the recovery
+    invariants (no request lost, charged <= full penalty, HBM ledger
+    consistent after kills, every reclaimed task completes or is shed
+    with an audit record);
+  * **planner oracle** — brute-force expected-cost-under-preemption on
+    tiny workflows must agree with ``esg_1q`` over ``preempt_priced``
+    tables, in both search engines;
+  * **golden fixture** — a seeded ``spot-storm`` run's outcome summary
+    is pinned against a committed fixture.
+"""
+import itertools
+import json
+import pathlib
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                      # optional dep: fall back to the
+    from _hypothesis_fallback import (   # vendored deterministic sampler
+        given, settings, strategies as st)
+
+from repro.cluster.emulator import KEEPALIVE_MS, ClusterSim
+from repro.core.astar import esg_1q
+from repro.core.profiles import (PAPER_FUNCTIONS, Config, FunctionProfile,
+                                 ProfileTable)
+from repro.core.scheduler import (CKPT_LOSS_FRAC, PREEMPT_LOSS_FRAC,
+                                  ESGScheduler)
+from repro.core.workflows import PAPER_APPS
+from repro.gpu import (DEFAULT_SKU, SKU_CATALOG, DeviceModel, GpuSKU,
+                       OversubscribedError, resolve_sku)
+from repro.obs import Recorder
+from repro.obs.validate import validate_audit
+from repro.serving import Gateway, get_autoscaler, get_scenario
+from repro.serving.autoscaler import AutoscalerPolicy
+from repro.serving.traces import (SCENARIOS, HeteroMixScenario,
+                                  SpotStormScenario)
+
+APPS = list(PAPER_APPS)
+HERE = pathlib.Path(__file__).resolve().parent
+GOLDEN = HERE / "fixtures" / "golden_spot_storm.json"
+N_REQ = 24
+
+# an aggressive test fleet: spot SKUs with short reclamation horizons so
+# small runs actually see kills without multi-minute simulated traces
+VOLATILE = GpuSKU(name="volatile", price_factor=0.3, spot=True,
+                  reclaim_mean_s=2.0, warn_ms=200.0, recover_ms=500.0)
+
+
+@pytest.fixture(scope="module")
+def tables():
+    return {n: ProfileTable.build(p) for n, p in PAPER_FUNCTIONS.items()}
+
+
+def _run(tables, scenario="mmpp", n=N_REQ, seed=0, slo_mult=1.0,
+         recorder=None, autoscaler="ewma", shed=True, **sim_kw):
+    sched = ESGScheduler(PAPER_APPS, tables, placement="locality")
+    sim = ClusterSim(PAPER_APPS, tables, PAPER_FUNCTIONS, sched,
+                     seed=seed, count_overhead=False,
+                     autoscaler=get_autoscaler(autoscaler),
+                     recorder=recorder, **sim_kw)
+    gw = Gateway(sim, shed_doomed=shed)
+    sc = get_scenario(scenario, app_names=APPS)
+    gw.inject(sc, n, seed=seed + 1, slo_mult=slo_mult)
+    tel = gw.run()
+    return tel, sim
+
+
+def _timeline(sim):
+    tasks = [(t.start_ms, t.end_ms, t.exec_start_ms, t.invoker, t.stage,
+              t.func, t.config, t.tier, t.cold, t.cost, t.quota_slices,
+              t.penalty_ms, t.full_penalty_ms)
+             for t in sim.tasks]
+    done = [(i.uid, i.arrival_ms, i.finish_ms) for i in sim.completed]
+    shed = [i.uid for i in sim.shed]
+    return tasks, done, shed, sim.total_cost, sim.cold_starts, \
+        sim.remote_transfers
+
+
+# ---------------------------------------------------------------------------
+# neutrality: a single-SKU no-spot fleet is the default emulator
+# ---------------------------------------------------------------------------
+@pytest.mark.slow
+@pytest.mark.parametrize("scenario", sorted(SCENARIOS))
+def test_single_sku_fleet_replays_bit_identically(tables, scenario):
+    tel_d, sim_d = _run(tables, scenario)
+    tel_f, sim_f = _run(tables, scenario, fleet=["a100"] * 16)
+    assert _timeline(sim_f) == _timeline(sim_d)
+    assert sim_f.gpu_summary() == sim_d.gpu_summary()
+    assert tel_f.summary() == tel_d.summary()
+
+
+def test_default_sku_object_fleet_is_also_neutral(tables):
+    """Passing GpuSKU objects (not names) that equal DEFAULT_SKU must be
+    detected by value, not identity."""
+    clone = GpuSKU()                     # equal to DEFAULT_SKU, new object
+    tel_d, sim_d = _run(tables, "uniform-normal", n=12)
+    tel_f, sim_f = _run(tables, "uniform-normal", n=12, fleet=[clone])
+    assert not sim_f._hetero and not sim_f._has_spot
+    assert _timeline(sim_f) == _timeline(sim_d)
+
+
+def test_default_fleet_has_no_reclaim_events(tables):
+    _, sim = _run(tables, "uniform-normal", n=12)
+    assert sim.reclaims == 0 and sim.reclaim_warnings == 0
+    assert sim.preemptions == 0 and sim.retries == 0
+    assert sim.sku_signature() is None
+
+
+# ---------------------------------------------------------------------------
+# SKU catalogue + resolution
+# ---------------------------------------------------------------------------
+def test_resolve_sku_accepts_name_object_and_none():
+    assert resolve_sku(None) is DEFAULT_SKU
+    assert resolve_sku("a100") == DEFAULT_SKU
+    sku = GpuSKU(name="custom", exec_rate=2.0)
+    assert resolve_sku(sku) is sku
+    assert resolve_sku("h100").exec_rate > 1.0
+
+
+def test_resolve_sku_unknown_name_lists_catalogue():
+    with pytest.raises(KeyError, match="a100"):
+        resolve_sku("no-such-gpu")
+
+
+def test_catalogue_spot_skus_carry_reclamation_rates():
+    for name, sku in SKU_CATALOG.items():
+        assert sku.name == name
+        assert sku.exec_rate > 0.0 and sku.price_factor > 0.0
+        if sku.spot:
+            assert sku.reclaim_mean_s > 0.0
+            assert sku.price_factor < 1.0      # spot must be discounted
+        else:
+            assert sku.reclaim_mean_s == 0.0
+
+
+# ---------------------------------------------------------------------------
+# preempt_priced: the planner-facing pricing transform
+# ---------------------------------------------------------------------------
+def test_preempt_priced_neutral_returns_self(tables):
+    t = tables["classification"]
+    assert t.preempt_priced() is t
+    assert t.preempt_priced(1.0, 0.0) is t
+
+
+def test_preempt_priced_rejects_bad_arguments(tables):
+    t = tables["classification"]
+    with pytest.raises(ValueError):
+        t.preempt_priced(0.0, 0.0)
+    with pytest.raises(ValueError):
+        t.preempt_priced(1.0, -1e-6)
+
+
+def test_preempt_priced_preserves_time_sort_and_configs(tables):
+    t = tables["deblur"]
+    p = t.preempt_priced(1.4, 1e-4)
+    assert p.configs == t.configs
+    assert np.all(np.diff(p.times) >= 0.0)
+    assert np.all(p.times > t.times)           # slower and risk-inflated
+    assert np.all(p.job_costs > t.job_costs)
+
+
+def test_preempt_priced_penalises_long_configs_superlinearly(tables):
+    """The inflation ratio must grow with config latency — the pressure
+    that steers the planner toward shorter stages under reclamation."""
+    t = tables["segmentation"]
+    p = t.preempt_priced(1.0, 1e-3)
+    ratio = p.times / t.times
+    assert ratio[-1] > ratio[0] > 1.0
+
+
+# ---------------------------------------------------------------------------
+# device-model ledger: kill / reclaim / empty
+# ---------------------------------------------------------------------------
+def test_device_kill_releases_slices_and_hbm():
+    dev = DeviceModel(vgpus=4, hbm_per_vgpu_mb=512.0)
+    a, _ = dev.start("f", 4, 300.0, 0.0)
+    used_slices, used_hbm = dev.used_slices, dev.hbm_used_mb
+    assert used_slices == 4 and used_hbm > 0.0
+    dev.kill(a.aid)
+    assert dev.used_slices == 0
+    assert dev.hbm_used_mb < used_hbm
+    dev.check()                                # ledger stays consistent
+
+
+def test_device_reclaim_clears_pools_and_weights():
+    dev = DeviceModel(vgpus=4, hbm_per_vgpu_mb=512.0)
+    dev.add_warm("a", 10_000.0, 300.0, 0.0)
+    dev.add_warm("b", 10_000.0, 200.0, 0.0)
+    assert any(pool for pool in dev.pools.values())
+    dev.reclaim()
+    assert not any(pool for pool in dev.pools.values())
+    assert not dev.weights and dev.hbm_used_mb == 0.0
+    dev.check()
+
+
+def test_device_reclaim_refuses_live_allocations():
+    dev = DeviceModel(vgpus=4, hbm_per_vgpu_mb=512.0)
+    dev.start("f", 2, 100.0, 0.0)
+    with pytest.raises(OversubscribedError):
+        dev.reclaim()
+
+
+def test_device_empty_reflects_allocs_and_pools():
+    dev = DeviceModel(vgpus=4, hbm_per_vgpu_mb=512.0)
+    assert dev.empty(0.0)
+    a, _ = dev.start("f", 2, 100.0, 0.0)
+    assert not dev.empty(0.0)
+    dev.kill(a.aid)
+    assert dev.empty(0.0)
+    dev.add_warm("f", 500.0, 100.0, 0.0)
+    assert not dev.empty(0.0)
+    assert dev.empty(1_000.0)                  # keep-alive expired -> gc'd
+
+
+# ---------------------------------------------------------------------------
+# SKU execution semantics in the emulator
+# ---------------------------------------------------------------------------
+def test_exec_rate_scales_task_durations(tables):
+    """On a noise-free run, every exec span on an exec_rate=0.5 SKU must
+    be exactly 2x the profile's deterministic latency model."""
+    slow = GpuSKU(name="slow", exec_rate=0.5)
+    _, slowed = _run(tables, "uniform-normal", n=10, autoscaler="none",
+                     fleet=[slow], noise_sigma=0.0)
+    assert slowed.tasks
+    for t in slowed.tasks:
+        es = t.end_ms - t.exec_start_ms
+        want = 2.0 * tables[t.func].fn.exec_ms(t.config)
+        assert es == pytest.approx(want, rel=1e-9)
+
+
+def test_price_factor_discounts_gpu_billing(tables):
+    cheap = GpuSKU(name="cheap", price_factor=0.5)
+    _, base = _run(tables, "uniform-normal", n=10, autoscaler="none")
+    _, disc = _run(tables, "uniform-normal", n=10, autoscaler="none",
+                   fleet=[cheap])
+    assert disc.total_cost < base.total_cost
+
+
+def test_warmup_from_zero_charged_once_per_empty_device(tables):
+    """A SKU with warmup_ms pays it only when the device is completely
+    empty; once containers exist, starts are warm-path identical."""
+    warm = GpuSKU(name="warmy", warmup_ms=500.0)
+    _, base = _run(tables, "uniform-normal", n=10, autoscaler="none",
+                   initial_warm=0, prewarm=False)
+    _, cold = _run(tables, "uniform-normal", n=10, autoscaler="none",
+                   initial_warm=0, prewarm=False, fleet=[warm])
+    delays = sum(1 for tb, tc in zip(base.tasks, cold.tasks)
+                 if tc.exec_start_ms - tc.start_ms ==
+                 pytest.approx(tb.exec_start_ms - tb.start_ms + 500.0))
+    assert 0 < delays < len(cold.tasks)        # first start per device only
+
+
+def test_sku_signature_reflects_fleet_composition(tables):
+    _, het = _run(tables, "uniform-normal", n=6,
+                  fleet=["a100", "h100"])
+    sig = het.sku_signature()
+    assert sig is not None
+    exec_factor, risk = sig
+    assert exec_factor < 1.0                   # h100s speed the fleet up
+    assert risk == 0.0                         # no spot capacity
+    _, spot = _run(tables, "uniform-normal", n=6,
+                   fleet=["a100", "a100-spot"])
+    exec_factor, risk = spot.sku_signature()
+    assert exec_factor == pytest.approx(1.0)
+    assert risk > 0.0
+
+
+def test_plan_cache_keys_fold_sku_signature(tables):
+    """Same queue state, different fleet signature -> different plan-
+    cache keys (mirrors the calibration keying of PR 7)."""
+    sched = ESGScheduler(PAPER_APPS, tables, placement="locality")
+    app = PAPER_APPS[APPS[0]]
+    stage = app.stages[0]
+
+    class J:
+        def __init__(self):
+            self.ready_ms = 0.0
+            self.inst = type("I", (), {"arrival_ms": 0.0,
+                                       "slo_ms": 5_000.0})()
+
+    sim_d = ClusterSim(PAPER_APPS, tables, PAPER_FUNCTIONS, sched,
+                       seed=0, count_overhead=False)
+    sim_h = ClusterSim(PAPER_APPS, tables, PAPER_FUNCTIONS, sched,
+                       seed=0, count_overhead=False,
+                       fleet=["a100", "t4-spot"])
+    assert ESGScheduler._fleet_sig(sim_d) is None
+    sig = ESGScheduler._fleet_sig(sim_h)
+    assert sig is not None and sig[0] > 1.0 and sig[1] > 0.0
+    # the certified plan signature folds the fleet signature in whenever
+    # it certifies at all (None means "must re-plan" and is always safe)
+    sig_d = sched.plan_signature(sim_d, app, stage, [J()], 0.0)
+    sig_h = sched.plan_signature(sim_h, app, stage, [J()], 0.0)
+    assert sig_h is None or sig_d != sig_h
+    assert sched.plan(sim_h, app, stage, [J()], 0.0)   # priced plan works
+    assert sched._spot_tables                          # memoized transform
+
+
+# ---------------------------------------------------------------------------
+# fault injection: reclamation storms
+# ---------------------------------------------------------------------------
+def _storm_run(tables, seed=3, n=40, storm_mult=3.0, recorder=None,
+               **sim_kw):
+    return _run(tables, "spot-storm", n=n, seed=seed, recorder=recorder,
+                fleet=["a100", VOLATILE, VOLATILE],
+                reclaim_storms=[(0.0, 1e9, storm_mult)], **sim_kw)
+
+
+def test_storm_kills_running_tasks_and_all_requests_survive(tables):
+    tel, sim = _storm_run(tables)
+    assert sim.reclaims > 0 and sim.recoveries == sim.reclaims
+    assert sim.preemptions > 0 and sim.retries > 0
+    assert sim.preempt_lost_ms > 0.0
+    # no request lost: every injected arrival completed or was shed
+    assert len(sim.completed) + len(sim.shed) == 40
+    for t in sim.tasks:
+        assert t.penalty_ms <= t.full_penalty_ms + 1e-9
+
+
+def test_storm_multiplier_accelerates_reclamations(tables):
+    _, calm = _storm_run(tables, storm_mult=1.0)
+    _, storm = _storm_run(tables, storm_mult=60.0)
+    assert storm.reclaims > calm.reclaims
+
+
+def test_retry_exhaustion_sheds_with_failed_flag(tables):
+    rec = Recorder(trace=False, metrics=False)
+    tel, sim = _storm_run(tables, max_retries=0,
+                          recorder=rec)
+    assert sim.preempt_shed > 0
+    failed = [i for i in sim.shed if i.failed]
+    assert len(failed) == sim.preempt_shed
+    sheds = [r for r in rec.audit.retries if r.action == "shed"]
+    assert len(sheds) == sim.preempt_shed
+    assert all(r.backoff_ms == 0.0 for r in sheds)
+    assert len(sim.completed) + len(sim.shed) == 40
+
+
+def test_checkpointed_stages_resume_instead_of_restarting(tables):
+    ck_profiles = {n: FunctionProfile(p.name, p.t1_ms, p.cold_ms,
+                                      p.input_mb, p.cpu_frac, p.model_mb,
+                                      checkpoint_mb=64.0)
+                   for n, p in PAPER_FUNCTIONS.items()}
+    ck_tables = {n: ProfileTable.build(p) for n, p in ck_profiles.items()}
+    rec = Recorder(trace=False, metrics=False)
+    sched = ESGScheduler(PAPER_APPS, ck_tables, placement="locality")
+    sim = ClusterSim(PAPER_APPS, ck_tables, ck_profiles, sched,
+                     seed=3, count_overhead=False,
+                     autoscaler=get_autoscaler("ewma"), recorder=rec,
+                     fleet=["a100", VOLATILE, VOLATILE],
+                     reclaim_storms=[(0.0, 1e9, 3.0)])
+    gw = Gateway(sim)
+    gw.inject(get_scenario("spot-storm", app_names=APPS), 40, seed=4)
+    gw.run()
+    assert sim.preemptions > 0
+    actions = {r.action for r in rec.audit.retries}
+    assert "resume" in actions
+    assert len(sim.completed) + len(sim.shed) == 40
+
+
+def test_retry_audit_records_validate_against_schema(tables):
+    rec = Recorder(trace=False, metrics=False)
+    _storm_run(tables, recorder=rec)
+    assert rec.audit.retries
+    records = [json.loads(json.dumps(
+        {"type": "retry", **r.__dict__}, default=str))
+        for r in rec.audit.retries]
+    counts = validate_audit(records, "storm")
+    assert counts["retry"] == len(rec.audit.retries)
+    for r in rec.audit.retries:
+        assert r.attempt >= 1 and r.lost_ms >= 0.0
+        assert r.action in ("retry", "resume", "shed")
+
+
+def test_recorder_captures_preemption_spans_and_metrics(tables):
+    rec = Recorder()
+    _, sim = _storm_run(tables, recorder=rec)
+    events = rec.tracer.events()
+    cats = {e.get("cat") for e in events}
+    assert "preempt" in cats and "reclaim" in cats
+    names = {e["name"] for e in events if e.get("cat") == "reclaim"}
+    assert {"reclaim_warning", "reclaim", "recover"} <= names
+    assert rec.metrics.total("reclamations") == sim.reclaims
+    assert rec.metrics.total("preemptions") == sim.preemptions
+    assert rec.metrics.total("preempt_lost_ms") == \
+        pytest.approx(sim.preempt_lost_ms)
+    assert rec.metrics.total("migrations") == sim.migrations
+
+
+def test_drain_and_migrate_moves_warm_capacity(tables):
+    _, sim = _storm_run(tables)
+    assert sim.migrations > 0
+    assert sim.gpu_summary()["migrations"] == sim.migrations
+
+
+def test_reclaimed_invoker_rejects_placements_until_recovery(tables):
+    sched = ESGScheduler(PAPER_APPS, tables)
+    sim = ClusterSim(PAPER_APPS, tables, PAPER_FUNCTIONS, sched, seed=0,
+                     count_overhead=False, fleet=["a100", VOLATILE])
+    inv = next(i for i in sim.invokers if i.sku.spot)
+    cfg = Config(1, 1, 1)
+    func = PAPER_FUNCTIONS["classification"].name
+    assert inv.fits(cfg, func, 0.0)
+    inv.draining = True
+    assert not inv.fits(cfg, func, 0.0)
+    inv.draining, inv.down = False, True
+    assert not inv.fits(cfg, func, 0.0)
+    inv.down = False
+    assert inv.fits(cfg, func, 0.0)
+
+
+# ---------------------------------------------------------------------------
+# property-style random walks over reclamation storms
+# ---------------------------------------------------------------------------
+def _walk_tables():
+    if not hasattr(_walk_tables, "_cache"):
+        _walk_tables._cache = {n: ProfileTable.build(p)
+                               for n, p in PAPER_FUNCTIONS.items()}
+    return _walk_tables._cache
+
+
+@pytest.mark.slow
+@settings(max_examples=5, deadline=None)
+@given(st.integers(min_value=0, max_value=10_000),
+       st.integers(min_value=5, max_value=120),
+       st.integers(min_value=0, max_value=3))
+def test_property_storm_walk_no_request_lost(seed, storm_mult, max_retries):
+    """Whatever the reclamation pressure and retry budget, every admitted
+    request must end as completed or shed — never silently dropped — and
+    the billing/penalty invariants must hold on every task."""
+    tables = _walk_tables()
+    tel, sim = _run(tables, "spot-storm", n=20, seed=seed,
+                    fleet=["a100", VOLATILE, VOLATILE],
+                    reclaim_storms=[(0.0, 1e9, float(storm_mult))],
+                    max_retries=max_retries)
+    assert len(sim.completed) + len(sim.shed) == 20
+    assert sim.recoveries == sim.reclaims
+    assert sim.preempt_lost_ms >= 0.0 and sim.total_cost >= 0.0
+    for t in sim.tasks:
+        assert t.penalty_ms <= t.full_penalty_ms + 1e-9
+        assert t.end_ms >= t.exec_start_ms >= t.start_ms
+    for inst in sim.completed:
+        assert not inst.failed and inst.finish_ms >= inst.arrival_ms
+
+
+@pytest.mark.slow
+@settings(max_examples=5, deadline=None)
+@given(st.integers(min_value=0, max_value=10_000),
+       st.integers(min_value=10, max_value=200))
+def test_property_hbm_ledger_survives_kill_storms(seed, storm_mult):
+    """The device HBM/slice ledgers self-check (OversubscribedError) on
+    every mutation, so a full storm run under finite HBM is itself the
+    assertion; afterwards no device may be over capacity or negative."""
+    tables = _walk_tables()
+    _, sim = _run(tables, "spot-storm", n=20, seed=seed,
+                  hbm_per_vgpu_mb=2_000.0, shared_weights=True,
+                  fleet=["a100", VOLATILE, VOLATILE],
+                  reclaim_storms=[(0.0, 1e9, float(storm_mult))])
+    for inv in sim.invokers:
+        dev = inv.device
+        dev.check()
+        assert 0.0 <= dev.hbm_used_mb <= dev.hbm_total_mb + 1e-9
+        assert 0 <= dev.used_slices <= dev.total_slices
+
+
+@pytest.mark.slow
+@settings(max_examples=5, deadline=None)
+@given(st.integers(min_value=0, max_value=10_000))
+def test_property_reclaimed_tasks_complete_or_shed_with_audit(seed):
+    """Every request touched by a preemption must either finish or be
+    shed, and each shed carries a terminal audit record."""
+    tables = _walk_tables()
+    rec = Recorder(trace=False, metrics=False)
+    _, sim = _run(tables, "spot-storm", n=20, seed=seed, recorder=rec,
+                  fleet=["a100", VOLATILE, VOLATILE],
+                  reclaim_storms=[(0.0, 1e9, 4.0)], max_retries=1)
+    done = {i.uid for i in sim.completed}
+    shed = {i.uid for i in sim.shed}
+    for r in rec.audit.retries:
+        assert r.uid in done | shed
+        if r.action == "shed":
+            assert r.uid in shed
+    shed_uids = {r.uid for r in rec.audit.retries if r.action == "shed"}
+    assert shed_uids == {i.uid for i in sim.shed if i.failed}
+
+
+# ---------------------------------------------------------------------------
+# planner-pricing oracle: brute force vs ESG_1Q under preemption pricing
+# ---------------------------------------------------------------------------
+def _tiny_tables(checkpoint_mb=0.0):
+    fns = [FunctionProfile("s0", 90.0, 1000.0, 1.0,
+                           checkpoint_mb=checkpoint_mb),
+           FunctionProfile("s1", 240.0, 1000.0, 1.0,
+                           checkpoint_mb=checkpoint_mb),
+           FunctionProfile("s2", 55.0, 1000.0, 1.0,
+                           checkpoint_mb=checkpoint_mb)]
+    return [ProfileTable.build(f, batches=(1, 4), vcpus=(1, 2),
+                               vgpus=(1, 2)) for f in fns]
+
+
+def _expected_cost_tables(tables, exec_factor, risk):
+    """Oracle: expected time/cost per config under preemption, computed
+    from first principles — T' = T*f plus risk*T'*T' of expected rework,
+    cost inflated by the same rework ratio."""
+    out = []
+    for t in tables:
+        stage_risk = risk * (CKPT_LOSS_FRAC if t.fn.checkpoint_mb > 0.0
+                             else PREEMPT_LOSS_FRAC)
+        base = t.times * exec_factor
+        rework = 1.0 + stage_risk * base
+        out.append((base * rework, t.job_costs * exec_factor * rework))
+    return out
+
+
+def _brute_force_cheapest(priced, g_slo):
+    best = None
+    for combo in itertools.product(*[range(len(ts)) for ts, _ in priced]):
+        tt = sum(ts[i] for (ts, _), i in zip(priced, combo))
+        cc = sum(cs[i] for (_, cs), i in zip(priced, combo))
+        if tt < g_slo and (best is None or cc < best):
+            best = cc
+    return best
+
+
+@pytest.mark.parametrize("exec_factor,risk", [
+    (1.0, 5e-4), (1.7, 0.0), (1.3, 2e-4), (0.8, 1e-3)])
+def test_preempt_priced_matches_first_principles_oracle(exec_factor, risk):
+    for ckpt in (0.0, 64.0):
+        tables = _tiny_tables(ckpt)
+        oracle = _expected_cost_tables(tables, exec_factor, risk)
+        for t, (times, costs) in zip(tables, oracle):
+            stage_risk = risk * (CKPT_LOSS_FRAC if ckpt > 0.0
+                                 else PREEMPT_LOSS_FRAC)
+            p = t.preempt_priced(exec_factor, stage_risk)
+            np.testing.assert_allclose(p.times, times, rtol=1e-12)
+            np.testing.assert_allclose(p.job_costs, costs, rtol=1e-12)
+
+
+@pytest.mark.parametrize("vectorized", [True, False])
+@pytest.mark.parametrize("g_slo", [400.0, 900.0, 2_500.0, 10_000.0])
+def test_esg_1q_top1_matches_brute_force_under_preemption(vectorized,
+                                                          g_slo):
+    exec_factor, risk = 1.3, 4e-4
+    tables = _tiny_tables()
+    priced = [t.preempt_priced(exec_factor, risk * PREEMPT_LOSS_FRAC)
+              for t in tables]
+    oracle = _expected_cost_tables(tables, exec_factor, risk)
+    best = _brute_force_cheapest(oracle, g_slo)
+    results = esg_1q(priced, g_slo, k=3, vectorized=vectorized)
+    assert results
+    top = results[0]
+    if best is None:
+        # infeasible: the search returns the best-effort fastest path
+        assert top.est_time_ms >= g_slo
+    else:
+        assert top.est_job_cost == pytest.approx(best, rel=1e-9)
+        assert top.est_time_ms < g_slo
+
+
+def test_esg_1q_engines_agree_on_priced_tables():
+    tables = [t.preempt_priced(1.5, 3e-4) for t in _tiny_tables()]
+    for g_slo in (300.0, 800.0, 2_000.0, 6_000.0):
+        vec = esg_1q(tables, g_slo, k=5, vectorized=True)
+        leg = esg_1q(tables, g_slo, k=5, vectorized=False)
+        assert [(r.configs, r.est_time_ms, r.est_job_cost) for r in vec] \
+            == [(r.configs, r.est_time_ms, r.est_job_cost) for r in leg]
+
+
+# ---------------------------------------------------------------------------
+# scenarios, migration policy, gateway coupling
+# ---------------------------------------------------------------------------
+def test_spot_storm_scenario_registered_and_deterministic():
+    sc = get_scenario("spot-storm", app_names=APPS)
+    a = sc.arrivals(APPS, 30, seed=5)
+    b = get_scenario("spot-storm", app_names=APPS).arrivals(APPS, 30, seed=5)
+    assert a == b
+    windows = sc.storm_windows(100_000.0)
+    assert len(windows) == 2
+    for t0, t1, mult in windows:
+        assert 0.0 < t0 < t1 < 100_000.0 and mult > 1.0
+    fleet = SpotStormScenario.suggested_fleet(9)
+    assert len(fleet) == 9
+    assert any(resolve_sku(s).spot for s in fleet)
+    assert any(not resolve_sku(s).spot for s in fleet)
+
+
+def test_hetero_mix_scenario_cycles_the_catalogue():
+    sc = get_scenario("hetero-mix", app_names=APPS)
+    a = sc.arrivals(APPS, 30, seed=5)
+    b = get_scenario("hetero-mix", app_names=APPS).arrivals(APPS, 30, seed=5)
+    assert a == b
+    fleet = HeteroMixScenario.suggested_fleet(10)
+    rates = {resolve_sku(s).exec_rate for s in fleet}
+    assert len(rates) > 1                       # genuinely heterogeneous
+    assert any(resolve_sku(s).spot for s in fleet)
+
+
+def test_spread_order_prefers_on_demand_under_early_warning(tables):
+    sched = ESGScheduler(PAPER_APPS, tables)
+    sim = ClusterSim(PAPER_APPS, tables, PAPER_FUNCTIONS, sched, seed=0,
+                     count_overhead=False,
+                     fleet=["a100-spot", "a100", "a100-spot", "a100"])
+    func = "classification"
+    default_order = AutoscalerPolicy.spread_order(sim, func)
+    sim.prefer_on_demand = True
+    alert_order = AutoscalerPolicy.spread_order(sim, func)
+    k = sum(1 for i in alert_order if not i.sku.spot)
+    assert all(not i.sku.spot for i in alert_order[:k])
+    assert all(i.sku.spot for i in alert_order[k:])
+    # stable re-sort: relative order within each class is preserved
+    assert [i.idx for i in default_order if not i.sku.spot] == \
+        [i.idx for i in alert_order[:k]]
+
+
+def test_gateway_health_warning_steers_placement_off_spot(tables):
+    class StubHealth:
+        def __init__(self):
+            self.warn = False
+
+        def early_warning(self, app=None):
+            return self.warn
+
+    sched = ESGScheduler(PAPER_APPS, tables)
+    sim = ClusterSim(PAPER_APPS, tables, PAPER_FUNCTIONS, sched, seed=0,
+                     count_overhead=False, fleet=["a100", "a100-spot"])
+    health = StubHealth()
+    gw = Gateway(sim, health=health)
+    gw.inject(get_scenario("uniform-normal", app_names=APPS), 4, seed=1)
+    sim.run()
+    assert sim.prefer_on_demand is False
+    health.warn = True
+    gw.inject(get_scenario("uniform-normal", app_names=APPS), 4, seed=2)
+    sim.run()
+    assert sim.prefer_on_demand is True
+
+
+def test_prefer_on_demand_fleet_avoids_spot_when_possible(tables):
+    """With ample on-demand capacity and prefer_on_demand set, no task
+    should land on a spot invoker."""
+    sched = ESGScheduler(PAPER_APPS, tables, placement="locality")
+    sim = ClusterSim(PAPER_APPS, tables, PAPER_FUNCTIONS, sched, seed=0,
+                     count_overhead=False,
+                     autoscaler=get_autoscaler("none"),
+                     fleet=["a100", "a100", "a100", "a100-spot"])
+    sim.prefer_on_demand = True
+    spot_idx = {i.idx for i in sim.invokers if i.sku.spot}
+    gw = Gateway(sim)
+    gw.inject(get_scenario("uniform-normal", app_names=APPS), 12, seed=1)
+    gw.run()
+    assert sim.tasks
+    assert all(t.invoker not in spot_idx for t in sim.tasks)
+
+
+# ---------------------------------------------------------------------------
+# golden fixture: seeded spot-storm outcome is pinned
+# ---------------------------------------------------------------------------
+def _golden_run():
+    tables = {n: ProfileTable.build(p) for n, p in PAPER_FUNCTIONS.items()}
+    tel, sim = _run(tables, "spot-storm", n=30, seed=11,
+                    fleet=["a100", VOLATILE, VOLATILE],
+                    reclaim_storms=[(0.0, 1e9, 40.0)])
+    s = tel.summary()
+    return {
+        "slo_attainment": s["slo_attainment"],
+        "cost_per_1k": s["cost_per_1k"],
+        "total_cost": s["total_cost"],
+        "completed": len(sim.completed),
+        "shed": len(sim.shed),
+        "gpu": {k: sim.gpu_summary()[k] for k in
+                ("reclaim_warnings", "reclamations", "recoveries",
+                 "preemptions", "retries", "preempt_shed",
+                 "preempt_lost_ms", "migrations")},
+    }
+
+
+def test_spot_storm_golden_fixture():
+    got = json.loads(json.dumps(_golden_run()))
+    want = json.loads(GOLDEN.read_text())
+    assert got == want, (
+        "seeded spot-storm outcome drifted from the committed fixture; "
+        "if the change is intentional, regenerate "
+        "tests/fixtures/golden_spot_storm.json "
+        "(python -c 'from tests.test_preemption_fleet import _golden_run; "
+        "import json; print(json.dumps(_golden_run(), indent=1))')")
