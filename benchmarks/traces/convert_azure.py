@@ -27,17 +27,31 @@ is destroyed here.  Same seed + same flags => identical output file.
     python benchmarks/traces/convert_azure.py \
         invocations_per_function_md.anon.d01.csv \
         --apps 6 --minutes 60 --scale 0.01 --out azure_d01_1h.csv
+
+Day-scale path: the dataset ships one file per day (``...d01.csv`` ..
+``...d14.csv``).  Pass several inputs and select with ``--day 3`` or
+``--days 2-4`` (1-based, in input order); selected days are
+concatenated on the time axis (day *k* offset by ``k*1440`` minutes).
+Multi-day conversion goes through the **streaming** converter: two
+passes over each file (totals, then kept rows only), minute-major
+emission straight to disk — peak memory is O(kept functions x minutes
+per day), never O(total arrivals), and a ``.gz`` ``--out`` is written
+compressed.  The streaming path draws jitter in minute-major order, so
+its output is its own deterministic family (same seed + flags =>
+identical file) but not byte-identical to the in-memory ``convert``.
 """
 from __future__ import annotations
 
 import argparse
 import csv
+import gzip
 import pathlib
-from typing import Optional, Sequence
+from typing import Iterable, Iterator, Optional, Sequence
 
 import numpy as np
 
 MS_PER_MINUTE = 60_000.0
+MINUTES_PER_DAY = 1440
 # id-column preference: function-level first, then coarser groupings
 ID_COLUMNS = ("HashFunction", "HashApp", "HashOwner")
 
@@ -71,6 +85,157 @@ def load_counts(path: str) -> dict[str, list[int]]:
                 cell = (row.get(c) or "").strip()
                 counts[i] += int(float(cell)) if cell else 0
     return out
+
+
+def _schema(path: str, fields: Sequence[str]) -> tuple[str, list[str]]:
+    """(id column, minute columns in numeric order) for one file, or
+    raise the same schema error as ``load_counts``."""
+    id_col = next((c for c in ID_COLUMNS if c in fields), None)
+    minute_cols = sorted((c for c in fields if c.strip().isdigit()),
+                         key=lambda c: int(c))
+    if id_col is None or not minute_cols:
+        raise ValueError(
+            f"{path}: expected an Azure invocation-count CSV with one "
+            f"of {ID_COLUMNS} plus numbered minute columns, got {list(fields)}")
+    return id_col, minute_cols
+
+
+def _opener(path: str):
+    return gzip.open if str(path).endswith(".gz") else open
+
+
+def scan_totals(paths: Sequence[str]) -> dict[str, int]:
+    """Streaming pass 1: per-function invocation totals across day
+    files.  Keeps one integer per function id — never a minute matrix —
+    so a 14-day scan stays at megabytes."""
+    totals: dict[str, int] = {}
+    for path in paths:
+        with _opener(path)(path, "rt", newline="") as f:
+            reader = csv.DictReader(f)
+            id_col, minute_cols = _schema(path, reader.fieldnames or [])
+            for row in reader:
+                rid = (row.get(id_col) or "").strip()
+                if not rid:
+                    continue
+                s = 0
+                for c in minute_cols:
+                    cell = (row.get(c) or "").strip()
+                    if cell:
+                        s += int(float(cell))
+                totals[rid] = totals.get(rid, 0) + s
+    return totals
+
+
+def stream_convert(paths: Sequence[str],
+                   apps: Optional[int] = None,
+                   minutes: Optional[int] = None,
+                   scale: float = 1.0,
+                   seed: int = 0,
+                   minutes_per_day: int = MINUTES_PER_DAY,
+                   ) -> Iterator[tuple[float, str]]:
+    """Streaming multi-day converter: yields time-sorted ``(t_ms, id)``
+    arrivals without ever materializing the trace.
+
+    Two passes per file: ``scan_totals`` picks the ``apps`` busiest
+    functions across *all* selected days (same tie-break as
+    ``convert``), then each day is re-read keeping only those rows —
+    peak state is the kept functions' minute matrix for one day.  Day
+    ``k`` (input order) is offset by ``k * minutes_per_day`` minutes.
+    Emission is minute-major (all of minute *m* across functions, inner
+    jitter sorted), so arrivals stream out in time order; the seeded
+    draw order therefore differs from ``convert``'s function-major
+    order — deterministic per (seed, flags), not byte-compatible.
+    ``minutes`` truncates each day, matching ``convert`` on one file.
+    """
+    if not scale > 0.0:            # also rejects NaN
+        raise ValueError(f"convert_azure: scale must be > 0, got {scale!r}")
+    totals = scan_totals(paths)
+    keep = sorted(totals, key=lambda k: (-totals[k], k))
+    if apps is not None:
+        keep = keep[:apps]
+    keep_ix = {rid: i for i, rid in enumerate(keep)}
+    rng = np.random.default_rng(seed)
+    for day, path in enumerate(paths):
+        with _opener(path)(path, "rt", newline="") as f:
+            reader = csv.DictReader(f)
+            id_col, minute_cols = _schema(path, reader.fieldnames or [])
+            if minutes is not None:
+                minute_cols = minute_cols[:minutes]
+            day_counts = np.zeros((len(keep), len(minute_cols)), dtype=np.int64)
+            for row in reader:
+                rid = (row.get(id_col) or "").strip()
+                ix = keep_ix.get(rid)
+                if ix is None:
+                    continue
+                for m, c in enumerate(minute_cols):
+                    cell = (row.get(c) or "").strip()
+                    if cell:
+                        day_counts[ix, m] += int(float(cell))
+        base_min = day * minutes_per_day
+        for m in range(day_counts.shape[1]):
+            burst: list[tuple[float, str]] = []
+            for ix, rid in enumerate(keep):   # deterministic draw order
+                want = int(day_counts[ix, m]) * scale
+                n = int(want) + int(rng.random() < (want - int(want)))
+                if n <= 0:
+                    continue
+                jitter = rng.random(n)
+                burst.extend(((base_min + m + float(u)) * MS_PER_MINUTE, rid)
+                             for u in jitter)
+            burst.sort(key=lambda r: (r[0], r[1]))
+            yield from burst
+
+
+def write_trace_stream(rows: Iterable[tuple[float, str]],
+                       out_path: str) -> int:
+    """Stream ``(t_ms, app)`` rows to ``out_path`` (gzip when it ends
+    in ``.gz``) without buffering; returns the row count.  Gzip output
+    pins ``mtime=0`` so the same rows always produce the same bytes —
+    the day-fixture checksum depends on it."""
+    import contextlib
+    import io
+
+    n = 0
+    with contextlib.ExitStack() as stack:
+        if str(out_path).endswith(".gz"):
+            raw = stack.enter_context(open(out_path, "wb"))
+            gz = stack.enter_context(
+                gzip.GzipFile(fileobj=raw, mode="wb", mtime=0))
+            f = stack.enter_context(io.TextIOWrapper(gz, newline=""))
+        else:
+            f = stack.enter_context(open(out_path, "w", newline=""))
+        w = csv.writer(f)
+        w.writerow(["t_ms", "app"])
+        for t, app in rows:
+            w.writerow([f"{t:.3f}", app])
+            n += 1
+    return n
+
+
+def parse_days(day: Optional[int], days: Optional[str],
+               n_inputs: int) -> list[int]:
+    """``--day``/``--days`` -> 0-based input indices (1-based on the
+    CLI, ``A-B`` ranges and ``A,B,C`` lists accepted)."""
+    if day is not None and days is not None:
+        raise ValueError("pass --day or --days, not both")
+    if day is None and days is None:
+        return list(range(n_inputs))
+    picks: list[int] = []
+    if day is not None:
+        picks = [day]
+    else:
+        for part in str(days).split(","):
+            part = part.strip()
+            if "-" in part:
+                lo, hi = part.split("-", 1)
+                picks.extend(range(int(lo), int(hi) + 1))
+            elif part:
+                picks.append(int(part))
+    for d in picks:
+        if not 1 <= d <= n_inputs:
+            raise ValueError(f"day {d} out of range (have {n_inputs} "
+                             f"input file(s), days are 1-based)")
+    return [d - 1 for d in picks]
 
 
 def convert(counts: dict[str, Sequence[int]],
@@ -117,30 +282,48 @@ def write_trace(rows: list[tuple[float, str]], out_path: str) -> None:
 
 def main(argv: Optional[Sequence[str]] = None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("input", help="Azure invocation-count CSV "
-                                  "(invocations_per_function_md.anon.*)")
+    ap.add_argument("inputs", nargs="+",
+                    help="Azure invocation-count CSVs, one per day "
+                         "(invocations_per_function_md.anon.d01.csv ...)")
+    ap.add_argument("--day", type=int, default=None,
+                    help="convert only day N (1-based, input order)")
+    ap.add_argument("--days", default=None,
+                    help="convert a day range/list, e.g. 2-4 or 1,3,5 "
+                         "(1-based, input order, concatenated in time)")
     ap.add_argument("--apps", type=int, default=None,
                     help="keep only the N busiest functions")
     ap.add_argument("--minutes", type=int, default=None,
-                    help="truncate to the first N minutes")
+                    help="truncate each day to its first N minutes")
     ap.add_argument("--scale", type=float, default=1.0,
                     help="multiply every bucket's count (0.01 thins a "
                          "production day to benchmark size)")
     ap.add_argument("--seed", type=int, default=0,
                     help="jitter/thinning seed (same seed => same trace)")
     ap.add_argument("--out", default=None,
-                    help="output CSV (default: <input stem>_trace.csv "
-                         "next to the input)")
+                    help="output CSV, .gz for compressed (default: "
+                         "<first input stem>_trace.csv next to the input)")
     args = ap.parse_args(argv)
 
-    rows = convert(load_counts(args.input), apps=args.apps,
-                   minutes=args.minutes, scale=args.scale, seed=args.seed)
-    src = pathlib.Path(args.input)
+    picks = parse_days(args.day, args.days, len(args.inputs))
+    paths = [args.inputs[i] for i in picks]
+    src = pathlib.Path(paths[0])
     out = args.out or str(src.with_name(src.stem + "_trace.csv"))
-    write_trace(rows, out)
-    span_min = rows[-1][0] / MS_PER_MINUTE if rows else 0.0
-    print(f"[convert-azure] {len(rows)} arrivals over {span_min:.1f} min, "
-          f"{len({a for _, a in rows})} functions -> {out}")
+    last_t = 0.0
+    funcs: set[str] = set()
+
+    def _tap(rows):
+        nonlocal last_t
+        for t, app in rows:
+            last_t = t
+            funcs.add(app)
+            yield t, app
+
+    n = write_trace_stream(
+        _tap(stream_convert(paths, apps=args.apps, minutes=args.minutes,
+                            scale=args.scale, seed=args.seed)), out)
+    span_min = last_t / MS_PER_MINUTE if n else 0.0
+    print(f"[convert-azure] {n} arrivals over {span_min:.1f} min, "
+          f"{len(funcs)} functions ({len(paths)} day file(s)) -> {out}")
     return 0
 
 

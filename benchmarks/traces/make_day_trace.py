@@ -1,0 +1,121 @@
+"""Generate the flagship full-day replay trace (deterministic, checked).
+
+The public Azure Functions 2019 dataset is too large to vendor, so the
+day-scale benchmark fixture is *generated* by this script and pinned by
+the committed checksum (``azure_2019_day_synth.sha256``): same script,
+same default flags => byte-identical ``azure_2019_day_synth.csv.gz``,
+which is why the multi-megabyte artifact itself stays out of git.
+
+The synthesis follows the shape the dataset's own paper (Shahrad et
+al., ATC'20) reports: a heavy-tailed per-function rate distribution
+(lognormal — a few functions dominate total traffic), a diurnal
+day-curve with per-function phase jitter, Poisson minute counts, and
+uniform intra-minute jitter (the dataset quantises at minutes, exactly
+what ``convert_azure`` reconstructs from the real CSVs).  Default
+output: 1440 minutes, 240 functions, ~1.05M arrivals, emitted
+minute-major (time-sorted) and streamed straight into the gzip writer
+— constant memory, no materialized trace.
+
+    python benchmarks/traces/make_day_trace.py           # write + checksum
+    python benchmarks/traces/make_day_trace.py --verify  # re-hash existing
+"""
+from __future__ import annotations
+
+import argparse
+import hashlib
+import pathlib
+import sys
+from typing import Iterator, Optional, Sequence
+
+import numpy as np
+
+HERE = pathlib.Path(__file__).resolve().parent
+sys.path.insert(0, str(HERE))
+from convert_azure import MS_PER_MINUTE, write_trace_stream  # noqa: E402
+
+DEFAULT_OUT = HERE / "azure_2019_day_synth.csv.gz"
+DEFAULT_MINUTES = 1440
+DEFAULT_FUNCS = 240
+DEFAULT_TARGET = 1_050_000   # expected arrivals over the day
+DEFAULT_SEED = 2019
+
+
+def synth_day(minutes: int = DEFAULT_MINUTES,
+              funcs: int = DEFAULT_FUNCS,
+              target: int = DEFAULT_TARGET,
+              seed: int = DEFAULT_SEED) -> Iterator[tuple[float, str]]:
+    """Yield time-sorted ``(t_ms, func_hash)`` arrivals for one day."""
+    rng = np.random.default_rng(seed)
+    names = [hashlib.blake2b(f"fn{i}".encode(), digest_size=8).hexdigest()
+             for i in range(funcs)]
+    # heavy-tail base rates: lognormal, normalised to the target volume
+    base = rng.lognormal(mean=0.0, sigma=1.8, size=funcs)
+    # per-function diurnal phase/depth (apps peak at different hours)
+    phase = rng.uniform(0.0, 1.0, size=funcs)
+    depth = rng.uniform(0.2, 0.8, size=funcs)
+    day_curve = 1.0 + depth[:, None] * np.sin(
+        2.0 * np.pi * (np.arange(minutes)[None, :] / minutes
+                       - 0.3 - phase[:, None]))
+    rate = base[:, None] * day_curve                  # funcs x minutes
+    rate *= target / rate.sum()
+    for m in range(minutes):
+        counts = rng.poisson(rate[:, m])
+        burst: list[tuple[float, str]] = []
+        for i in np.flatnonzero(counts):
+            jitter = rng.random(int(counts[i]))
+            burst.extend(((m + float(u)) * MS_PER_MINUTE, names[i])
+                         for u in jitter)
+        burst.sort(key=lambda r: (r[0], r[1]))
+        yield from burst
+
+
+def sha256_of(path: str, chunk: int = 1 << 20) -> str:
+    h = hashlib.sha256()
+    with open(path, "rb") as f:
+        while True:
+            b = f.read(chunk)
+            if not b:
+                break
+            h.update(b)
+    return h.hexdigest()
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default=str(DEFAULT_OUT))
+    ap.add_argument("--minutes", type=int, default=DEFAULT_MINUTES)
+    ap.add_argument("--funcs", type=int, default=DEFAULT_FUNCS)
+    ap.add_argument("--target", type=int, default=DEFAULT_TARGET)
+    ap.add_argument("--seed", type=int, default=DEFAULT_SEED)
+    ap.add_argument("--verify", action="store_true",
+                    help="hash the existing output file against the "
+                         "committed .sha256 instead of regenerating")
+    args = ap.parse_args(argv)
+    out = pathlib.Path(args.out)
+    sumfile = out.with_suffix("").with_suffix("")  # strip .csv.gz
+    sumfile = sumfile.parent / (sumfile.name + ".sha256")
+
+    if args.verify:
+        want = sumfile.read_text().split()[0]
+        got = sha256_of(str(out))
+        ok = want == got
+        print(f"[make-day-trace] {out.name}: "
+              f"{'OK' if ok else f'MISMATCH (want {want}, got {got})'}")
+        return 0 if ok else 1
+
+    n = write_trace_stream(
+        synth_day(minutes=args.minutes, funcs=args.funcs,
+                  target=args.target, seed=args.seed), str(out))
+    digest = sha256_of(str(out))
+    is_default = (args.minutes, args.funcs, args.target, args.seed) == \
+        (DEFAULT_MINUTES, DEFAULT_FUNCS, DEFAULT_TARGET, DEFAULT_SEED) \
+        and str(out) == str(DEFAULT_OUT)
+    if is_default:
+        sumfile.write_text(f"{digest}  {out.name}\n")
+    print(f"[make-day-trace] {n} arrivals, {args.funcs} functions, "
+          f"{args.minutes} min -> {out} (sha256 {digest[:16]}...)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

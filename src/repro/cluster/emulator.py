@@ -25,10 +25,32 @@ changed their placement feasibility or candidate configs, and placement
 fallbacks walk a cached capacity-sorted invoker order.  The full-scan
 reference behaviour (``sparse=False``) replays bit-identically — the
 differential tests in ``tests/test_planner_fastpath.py`` pin it.
+
+Day-scale replay additions (all bit-identical to the legacy paths, the
+differential tests in ``tests/test_sharded_replay.py`` pin them):
+
+  * the scheduling pass walks an *active ready set* (non-empty,
+    non-blocked queues ordered by queue-creation index — exactly the
+    dict-insertion order the full scan iterated) instead of scanning
+    every queue key ever created per event;
+  * ``retain="stream"`` drops the O(invocations) retention lists
+    (``tasks``/``completed``/``shed``/``sched_overheads_ms``) in favour
+    of streaming accumulators + log-bucketed histograms, and recycles
+    ``Task``/``Job`` dataclasses through free-list pools (``gen`` keeps
+    counting across reuses so stale resize/complete events can never
+    match a recycled task);
+  * ``add_arrival_stream`` feeds arrivals lazily from a generator while
+    *reserving* their event sequence numbers up front, so the heap pops
+    in exactly the order full pre-injection would have produced;
+  * ``track_digest=True`` folds every retired task and completed
+    request into a running blake2b digest — the cross-process,
+    cross-mode schedule fingerprint the sharded replay engine
+    (``repro.cluster.shard``) compares against the legacy emulator.
 """
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 import heapq
 import itertools
 import math
@@ -51,6 +73,10 @@ LOCAL_TRANSFER_MS = 1.0
 REMOTE_TRANSFER_FIXED_MS = 20.0
 REMOTE_TRANSFER_MS_PER_MB = 8.0   # ~125 MB/s remote store
 RECHECK_LIMIT = 3
+# free-list caps for ``retain="stream"`` (bounds pool memory; anything
+# past the cap is simply left to the garbage collector)
+TASK_POOL_CAP = 4096
+JOB_POOL_CAP = 65536
 
 
 def home_invoker(app_name: str, func: str, n_invokers: int) -> int:
@@ -137,7 +163,8 @@ class Invoker:
                  footprints: Optional[dict[str, float]] = None,
                  shared_weights: bool = False,
                  overlap: bool = False,
-                 sku: Optional[GpuSKU] = None):
+                 sku: Optional[GpuSKU] = None,
+                 device_checks: bool = True):
         self.idx = idx
         self.vcpus = vcpus
         self.vgpus = vgpus
@@ -157,7 +184,8 @@ class Invoker:
                if self.sku.hbm_per_vgpu_mb is not None else hbm_per_vgpu_mb)
         self.device = DeviceModel(vgpus, hbm_per_vgpu_mb=hbm,
                                   shared_weights=shared_weights,
-                                  overlap=overlap, sku=self.sku)
+                                  overlap=overlap, sku=self.sku,
+                                  validate=device_checks)
         # optional sim hook observing new keep-alive expiries (the
         # event-sparse emulator's expiry watermark)
         self.note_expiry: Optional[Callable[[float], None]] = None
@@ -276,7 +304,13 @@ class ClusterSim:
                  fleet: Optional[list] = None,
                  reclaim_storms: Optional[list[tuple]] = None,
                  max_retries: int = 4,
-                 retry_backoff_ms: float = 250.0):
+                 retry_backoff_ms: float = 250.0,
+                 retain: str = "full",
+                 track_digest: bool = False,
+                 device_checks: bool = True):
+        if retain not in ("full", "stream"):
+            raise ValueError(f"retain must be 'full' or 'stream', "
+                             f"got {retain!r}")
         self.apps = apps
         self.tables = tables
         self.profiles = profiles
@@ -323,7 +357,8 @@ class ClusterSim:
                                  footprints=footprints,
                                  shared_weights=shared_weights,
                                  overlap=overlap,
-                                 sku=assigned[i])
+                                 sku=assigned[i],
+                                 device_checks=device_checks)
                          for i in range(n_invokers)]
         for inv in self.invokers:
             inv.note_expiry = self._note_expiry
@@ -341,6 +376,13 @@ class ClusterSim:
         # only ``enabled = False`` and every hook site guards on it, so
         # the disabled path does no work and replays bit-identically
         self.recorder = NULL_RECORDER if recorder is None else recorder
+        # stream retention recycles Task objects at completion; the flight
+        # recorder holds per-task span state past that point, so the two
+        # are mutually exclusive (record per shard in full mode instead)
+        if retain == "stream" and self.recorder.enabled:
+            raise ValueError("retain='stream' cannot be combined with an "
+                             "enabled flight recorder (recorded runs keep "
+                             "per-task spans; use retain='full')")
         if self.recorder.enabled:
             self.recorder.bind_sim(self)
         self.noise_sigma = noise_sigma
@@ -355,6 +397,44 @@ class ClusterSim:
         self.queues: dict[tuple[str, str], deque[Job]] = defaultdict(deque)
         self.recheck: dict[tuple[str, str], int] = {}
         self._blocked: set[tuple[str, str]] = set()
+        # active ready set: non-empty queue keys plus their creation
+        # index — the scheduling pass iterates these in creation order,
+        # which is exactly the dict-insertion order the legacy full scan
+        # walked, without touching the (app x stage)-many idle keys
+        self._nonempty: set[tuple[str, str]] = set()
+        self._qorder: dict[tuple[str, str], int] = {}
+        # lazy arrival stream (None = all arrivals pre-injected)
+        self._arrival_iter = None
+        self._arrival_seq = 0
+        self._last_arrival_t = -math.inf
+        # retention mode + streaming accumulators (kept in both modes so
+        # digests and counters never depend on the mode)
+        self.retain = retain
+        self.n_tasks = 0
+        self.n_completed = 0
+        self.n_shed = 0
+        self.slo_hits_n = 0
+        self._lat_sum = 0.0
+        self._ovh_sum = 0.0
+        self._ovh_n = 0
+        self._horizon_ms = 0.0
+        self._task_pool: list[Task] = []
+        self._job_pool: list[Job] = []
+        self._lat_hist = self._ovh_hist = None
+        if retain == "stream":
+            from repro.serving.telemetry import LatencyHistogram
+            self._lat_hist = LatencyHistogram()
+            self._ovh_hist = LatencyHistogram()
+        # optional streaming hooks (set by Gateway/Telemetry in stream
+        # mode): a deque of (app, stage, wait_ms) queue-delay samples the
+        # gateway drains instead of scanning ``sim.tasks``, plus retire/
+        # completion callbacks feeding telemetry online
+        self.dispatch_feed: Optional[deque] = None
+        self.on_task_retire: Optional[Callable[[Task], None]] = None
+        self.on_request_done: Optional[Callable[[AppInstance], None]] = None
+        # streaming schedule digest (see ``run_digest``)
+        self._digest = (hashlib.blake2b(digest_size=16) if track_digest
+                        else None)
         # warm-pool policy: the legacy prewarm/initial_warm knobs map onto
         # the default policies; pass ``autoscaler`` to swap in another
         if autoscaler is None:
@@ -407,6 +487,67 @@ class ClusterSim:
         inst = AppInstance(self.apps[app_name], uid, t, slo_ms)
         self.push_event(t, "arrival", inst)
 
+    def add_arrival_stream(self, arrivals, n: int) -> None:
+        """Feed ``n`` arrivals lazily from an iterator of
+        ``(app_name, t_ms, slo_ms, uid)`` tuples (time-sorted).
+
+        Exactly one pending arrival event lives in the heap at a time;
+        popping it pulls the next from the iterator.  The ``n`` event
+        sequence numbers the pre-injection path would have handed the
+        arrivals are *reserved* up front and runtime events start after
+        them, so every heap comparison — and therefore the replay — is
+        bit-identical to calling ``add_arrival`` ``n`` times before
+        ``run()``, without materializing ``n`` ``AppInstance`` objects
+        and heap entries."""
+        if self._arrival_iter is not None:
+            raise ValueError("an arrival stream is already attached")
+        if self._has_spot:
+            raise ValueError(
+                "add_arrival_stream does not support spot fleets: the "
+                "reclamation schedule needs the full trace horizon "
+                "(pre-inject with add_arrival instead)")
+        self._arrival_iter = iter(arrivals)
+        base = next(self._seq)
+        self._arrival_seq = base
+        self._seq = itertools.count(base + n)
+        self._push_next_arrival()
+
+    def _push_next_arrival(self) -> None:
+        nxt = next(self._arrival_iter, None)
+        if nxt is None:
+            self._arrival_iter = None
+            return
+        app_name, t, slo_ms, uid = nxt
+        if t < self._last_arrival_t:
+            raise ValueError(
+                f"arrival stream must be time-sorted: got t={t} after "
+                f"t={self._last_arrival_t}")
+        self._last_arrival_t = t
+        inst = AppInstance(self.apps[app_name], uid, t, slo_ms)
+        heapq.heappush(self._events,
+                       (t, self._arrival_seq, "arrival", inst))
+        self._arrival_seq += 1
+
+    # ---- queue bookkeeping ------------------------------------------------
+    def _queue_push(self, key: tuple[str, str], job: Job) -> None:
+        q = self.queues[key]
+        if not q:
+            self._nonempty.add(key)
+            if key not in self._qorder:
+                self._qorder[key] = len(self._qorder)
+        q.append(job)
+
+    def _new_job(self, inst: AppInstance, stage: str,
+                 ready_ms: float) -> Job:
+        pool = self._job_pool
+        if pool:
+            job = pool.pop()
+            job.inst = inst
+            job.stage = stage
+            job.ready_ms = ready_ms
+            return job
+        return Job(inst, stage, ready_ms)
+
     # ---- main loop -------------------------------------------------------
     def run(self):
         if self._has_spot and not self._reclaims_seeded:
@@ -416,6 +557,8 @@ class ClusterSim:
             self.now = max(self.now, t)
             if kind == "arrival":
                 self._on_arrival(payload)
+                if self._arrival_iter is not None:
+                    self._push_next_arrival()
             elif kind == "complete":
                 task, gen = payload
                 if gen != task.gen:
@@ -674,11 +817,12 @@ class ClusterSim:
             backoff = self.retry_backoff_ms * (2.0 ** (attempt - 1))
             self.retries += 1
             self.push_event(now + backoff, "retry",
-                            Job(inst, task.stage, now + backoff))
+                            self._new_job(inst, task.stage, now + backoff))
             if self.recorder.enabled:
                 self.recorder.on_retry_decision(
                     now, inst.app.name, task.stage, inst.uid, task.invoker,
                     attempt, action, backoff, lost)
+        self._retire_task(task)
 
     def _shed_inflight(self, inst: AppInstance, stage: str, inv_idx: int,
                        attempt: int, lost: float) -> None:
@@ -694,7 +838,9 @@ class ClusterSim:
             if len(kept) != len(q):
                 q.clear()
                 q.extend(kept)
-        self.shed.append(inst)
+                if not q:
+                    self._nonempty.discard(skey)
+        self._shed_inst(inst)
         if self.recorder.enabled:
             self.recorder.on_retry_decision(
                 self.now, inst.app.name, stage, inst.uid, inv_idx,
@@ -704,13 +850,13 @@ class ClusterSim:
         if job.inst.done or job.inst.failed:
             return
         key = (job.inst.app.name, job.stage)
-        self.queues[key].append(job)
+        self._queue_push(key, job)
         self._blocked.discard(key)
 
     # ---- handlers --------------------------------------------------------
     def _on_arrival(self, inst: AppInstance):
         if self.admission is not None and not self.admission(self, inst):
-            self.shed.append(inst)       # load-shed at the door
+            self._shed_inst(inst)        # load-shed at the door
             return
         if self.recorder.enabled:
             self.recorder.on_admitted(inst, self.now)
@@ -719,8 +865,15 @@ class ClusterSim:
             inst.pending_preds[s] = len(inst.app.predecessors(s))
         for root in inst.app.roots:
             key = (inst.app.name, root)
-            self.queues[key].append(Job(inst, root, self.now))
+            self._queue_push(key, self._new_job(inst, root, self.now))
             self._blocked.discard(key)
+
+    def _shed_inst(self, inst: AppInstance) -> None:
+        self.n_shed += 1
+        if self.retain == "full":
+            self.shed.append(inst)
+        if self._digest is not None:
+            self._fold(("shed", inst.uid, repr(inst.arrival_ms)))
 
     def _on_complete(self, task: Task):
         inv = self.invokers[task.invoker]
@@ -745,24 +898,106 @@ class ClusterSim:
             if not succs and not inst.done:
                 inst.done = True
                 inst.finish_ms = self.now
-                self.completed.append(inst)
+                self._complete_inst(inst)
             for s in succs:
                 inst.pending_preds[s] -= 1
                 if inst.pending_preds[s] == 0:
                     skey = (inst.app.name, s)
-                    self.queues[skey].append(Job(inst, s, self.now))
+                    self._queue_push(skey, self._new_job(inst, s, self.now))
                     self._blocked.discard(skey)
         if self.recorder.enabled:
             self.recorder.on_task_complete(self, task)
         # policy hook *after* successors are queued so the autoscaler sees
         # the true backlog (vertical policies grow idle pools here)
         self.autoscaler.on_complete(self, task)
+        self._retire_task(task)
+
+    # ---- streaming retention / digest -------------------------------------
+    def _complete_inst(self, inst: AppInstance) -> None:
+        self.n_completed += 1
+        lat = inst.finish_ms - inst.arrival_ms
+        if lat <= inst.slo_ms:
+            self.slo_hits_n += 1
+        if self.retain == "full":
+            self.completed.append(inst)
+        else:
+            self._lat_sum += lat
+            self._lat_hist.record(lat)
+            self._horizon_ms = max(self._horizon_ms, inst.finish_ms)
+        if self._digest is not None:
+            self._fold(("done", inst.uid, repr(inst.arrival_ms),
+                        repr(inst.finish_ms)))
+        if self.on_request_done is not None:
+            self.on_request_done(inst)
+
+    def _retire_task(self, task: Task) -> None:
+        """A task left the running set for good (completion or
+        reclamation kill): fold it into the digest, feed the streaming
+        hooks, then — in stream mode — recycle it and its jobs through
+        the free-list pools instead of retaining them forever."""
+        if self._digest is not None:
+            self._fold_task(task)
+        if self.on_task_retire is not None:
+            self.on_task_retire(task)
+        if self.retain == "full":
+            return
+        self._horizon_ms = max(self._horizon_ms, task.end_ms)
+        task.gen += 1                 # stale any in-flight resize events
+        jobs = task.jobs
+        task.jobs = []
+        pool = self._job_pool
+        for job in jobs:
+            if len(pool) < JOB_POOL_CAP:
+                job.inst = None       # release the AppInstance
+                pool.append(job)
+        if len(self._task_pool) < TASK_POOL_CAP:
+            self._task_pool.append(task)
+
+    def _fold(self, payload: tuple) -> None:
+        self._digest.update(repr(payload).encode())
+
+    def _fold_task(self, task: Task) -> None:
+        # everything schedule_digest-style comparisons care about, minus
+        # ``gen`` (monotone across pool reuses, so mode-dependent)
+        c = task.config
+        self._fold(("task", task.tid, task.stage, task.func,
+                    c.batch, c.vcpu, c.vgpu, task.invoker,
+                    repr(task.start_ms), repr(task.end_ms),
+                    repr(task.exec_start_ms), task.tier, task.cold,
+                    repr(task.cost), task.quota_slices,
+                    repr(task.penalty_ms), repr(task.full_penalty_ms),
+                    task.preempted,
+                    tuple(j.inst.uid for j in task.jobs)))
+
+    def run_digest(self) -> str:
+        """Hex digest of the streamed schedule: every retired task's
+        placement/timing/cost tuple, every completion and shed, plus the
+        run totals.  Identical across ``retain`` modes, arrival feeding
+        modes and processes — the bit-identity fingerprint the sharded
+        replay engine compares (requires ``track_digest=True``)."""
+        if self._digest is None:
+            raise ValueError("run_digest requires ClusterSim("
+                             "track_digest=True)")
+        h = self._digest.copy()
+        h.update(repr(("totals", self.n_tasks, self.n_completed,
+                       self.n_shed, self.slo_hits_n,
+                       repr(self.total_cost), self.cold_starts,
+                       self.remote_transfers, self.preemptions,
+                       repr(self.slice_busy_ms),
+                       repr(self.penalty_charged_ms))).encode())
+        return h.hexdigest()
 
     # ---- scheduling pass ---------------------------------------------------
     def _schedule_pass(self):
-        keys = [k for k, q in self.queues.items()
-                if q and k not in self._blocked]
-        for key in keys:
+        # active ready set: only queues currently holding jobs take part,
+        # iterated in queue-creation order — exactly the dict-insertion
+        # order the legacy `self.queues.items()` scan produced, without
+        # the O(total queue keys)-per-event cost at day scale
+        ready = self._nonempty - self._blocked
+        if not ready:
+            return
+        qorder = self._qorder
+        for key in sorted(ready, key=qorder.__getitem__):
             # round-robin over AFW queues, draining each (paper Fig 2d);
             # blocked queues wait for a capacity-changing event (the recheck
             # list retry is capacity-driven: within a pass capacity only
@@ -770,6 +1005,8 @@ class ClusterSim:
             while self.queues[key] and key not in self._blocked:
                 if not self._try_queue(key):
                     break
+            if not self.queues[key]:
+                self._nonempty.discard(key)
 
     def _try_queue(self, key: tuple[str, str]) -> bool:
         """Dispatch from one AFW queue; returns True if a task was launched."""
@@ -790,7 +1027,12 @@ class ClusterSim:
         charged = getattr(self.sched, "charged_overhead_ms", 0.0)
         if charged:
             overhead_ms = charged
-        self.sched_overheads_ms.append(overhead_ms)
+        if self.retain == "full":
+            self.sched_overheads_ms.append(overhead_ms)
+        else:
+            self._ovh_sum += overhead_ms
+            self._ovh_n += 1
+            self._ovh_hist.record(overhead_ms)
         if self.recorder.enabled:
             self.recorder.on_plan_timed(self)
         # scheduling overhead delays the task being scheduled (the controller
@@ -971,6 +1213,8 @@ class ClusterSim:
         q = self.queues[key]
         for _ in jobs:
             q.popleft()
+        if not q:
+            self._nonempty.discard(key)
 
         # data transfer: remote if any predecessor output lives elsewhere
         transfer = 0.0
@@ -1059,12 +1303,44 @@ class ClusterSim:
         self.total_cost += cost
         self.penalty_charged_ms += charged
         self.penalty_full_ms += full
-        task = Task(jobs, stage, func, cfg, inv_idx, start, end, cold, cost,
-                    tid=len(self.tasks), tier=tier, alloc_id=alloc.aid,
-                    quota_slices=slices, exec_start_ms=exec_start,
-                    dispatch_ms=self.now, q_since=self.now,
-                    penalty_ms=charged, full_penalty_ms=full)
-        self.tasks.append(task)
+        tid = self.n_tasks
+        self.n_tasks += 1
+        if self._task_pool:
+            # free-list reuse (stream mode): every field is reassigned;
+            # ``gen`` keeps counting from the previous life so stale
+            # complete/resize events of that life can never match
+            task = self._task_pool.pop()
+            task.jobs = jobs
+            task.stage = stage
+            task.func = func
+            task.config = cfg
+            task.invoker = inv_idx
+            task.start_ms = start
+            task.end_ms = end
+            task.cold = cold
+            task.cost = cost
+            task.tid = tid
+            task.tier = tier
+            task.alloc_id = alloc.aid
+            task.quota_slices = slices
+            task.exec_start_ms = exec_start
+            task.dispatch_ms = self.now
+            task.q_since = self.now
+            task.penalty_ms = charged
+            task.full_penalty_ms = full
+            task.preempted = False
+        else:
+            task = Task(jobs, stage, func, cfg, inv_idx, start, end, cold,
+                        cost, tid=tid, tier=tier, alloc_id=alloc.aid,
+                        quota_slices=slices, exec_start_ms=exec_start,
+                        dispatch_ms=self.now, q_since=self.now,
+                        penalty_ms=charged, full_penalty_ms=full)
+        if self.retain == "full":
+            self.tasks.append(task)
+        if self.dispatch_feed is not None:
+            for job in jobs:
+                self.dispatch_feed.append(
+                    (app_name, stage, max(start - job.ready_ms, 0.0)))
         self.running[task.tid] = task
         self.push_event(end, "complete", (task, task.gen))
         if self.recorder.enabled:
@@ -1127,28 +1403,38 @@ class ClusterSim:
 
     # ---- metrics -------------------------------------------------------------
     def slo_hit_rate(self) -> float:
-        if not self.completed:
-            return 0.0
-        hits = sum(1 for i in self.completed
-                   if i.finish_ms - i.arrival_ms <= i.slo_ms)
-        return hits / len(self.completed)
+        # counters are maintained in both retention modes (full mode
+        # additionally keeps the instance list) — same arithmetic either way
+        return self.slo_hits_n / self.n_completed if self.n_completed else 0.0
 
     def summary(self) -> dict[str, Any]:
-        lat = np.array([i.finish_ms - i.arrival_ms for i in self.completed]) \
-            if self.completed else np.array([0.0])
-        ovh = np.array(self.sched_overheads_ms) if self.sched_overheads_ms \
-            else np.array([0.0])
+        if self.retain == "full":
+            lat = np.array([i.finish_ms - i.arrival_ms
+                            for i in self.completed]) \
+                if self.completed else np.array([0.0])
+            ovh = np.array(self.sched_overheads_ms) \
+                if self.sched_overheads_ms else np.array([0.0])
+            lat_mean, lat_p95 = float(lat.mean()), float(np.percentile(lat, 95))
+            ovh_mean, ovh_p95 = float(ovh.mean()), float(np.percentile(ovh, 95))
+        else:
+            # streaming accumulators: means are exact, percentiles come
+            # from the log-bucketed histograms (O(1) memory)
+            lat_mean = (self._lat_sum / self.n_completed
+                        if self.n_completed else 0.0)
+            lat_p95 = self._lat_hist.percentile(95)
+            ovh_mean = self._ovh_sum / self._ovh_n if self._ovh_n else 0.0
+            ovh_p95 = self._ovh_hist.percentile(95)
         return {
             "scheduler": self.sched.name,
             "autoscaler": getattr(self.autoscaler, "name", "?"),
-            "completed": len(self.completed),
-            "shed": len(self.shed),
+            "completed": self.n_completed,
+            "shed": self.n_shed,
             "slo_hit_rate": self.slo_hit_rate(),
             "total_cost": self.total_cost,
-            "mean_latency_ms": float(lat.mean()),
-            "p95_latency_ms": float(np.percentile(lat, 95)),
-            "mean_sched_overhead_ms": float(ovh.mean()),
-            "p95_sched_overhead_ms": float(np.percentile(ovh, 95)),
+            "mean_latency_ms": lat_mean,
+            "p95_latency_ms": lat_p95,
+            "mean_sched_overhead_ms": ovh_mean,
+            "p95_sched_overhead_ms": ovh_p95,
             "cold_starts": self.cold_starts,
             "remote_transfers": self.remote_transfers,
             "config_misses": self.config_misses,

@@ -174,7 +174,12 @@ class ESGScheduler(SchedulerPolicy):
             # stages of the group from the current one onward
             idx = group.stages.index(stage)
             stages = group.stages[idx:]
-            funcs = [app.func_of[s] for s in stages]
+            # tuple: doubles as the "shape" axis of every planner memo
+            # and plan-cache key below — cache entries are pure
+            # functions of the profile-table contents, so apps sharing
+            # a function suffix share entries (collapses an N-app
+            # population of cloned workflows to a handful of shapes)
+            funcs = tuple(app.func_of[s] for s in stages)
             base = [self.tables[f] for f in funcs]
             if self.pareto:
                 base = [t.pareto() for t in base]
@@ -209,10 +214,10 @@ class ESGScheduler(SchedulerPolicy):
         f = cal.factors(app_name, stages)
         return f if any(x != 1.0 for x in f) else None
 
-    def _corrected(self, app_name: str, stage: str, bucket: int,
+    def _corrected(self, funcs: tuple, bucket: int,
                    tables: list[ProfileTable],
                    factors: tuple) -> list[ProfileTable]:
-        key = (app_name, stage, bucket, factors)
+        key = (funcs, bucket, factors)
         got = self._scaled.get(key)
         if got is None:
             got = self._scaled[key] = [
@@ -227,14 +232,14 @@ class ESGScheduler(SchedulerPolicy):
         fn = getattr(sim, "sku_signature", None)
         return fn() if fn is not None else None
 
-    def _spot_priced(self, app_name: str, stage: str, bucket: int,
+    def _spot_priced(self, funcs: tuple, bucket: int,
                      factors: Optional[tuple], sku_sig: tuple,
                      tables: list[ProfileTable]) -> list[ProfileTable]:
         """Suffix tables with SKU-scaled exec times and expected
         preemption loss priced into both ESG_1Q blades (memoized — the
         distinct signatures over a run are the fleet's up/down
         compositions, a handful)."""
-        key = (app_name, stage, bucket, factors, sku_sig)
+        key = (funcs, bucket, factors, sku_sig)
         got = self._spot_tables.get(key)
         if got is None:
             exec_factor, risk = sku_sig
@@ -254,9 +259,9 @@ class ESGScheduler(SchedulerPolicy):
         i = bisect.bisect_right(lat, n)
         return lat[i - 1] if i else 0
 
-    def _prepared(self, app_name: str, stage: str, base: list[ProfileTable],
+    def _prepared(self, funcs: tuple, base: list[ProfileTable],
                   bucket: int) -> list[ProfileTable]:
-        key = (app_name, stage, bucket)
+        key = (funcs[0], bucket)
         first = self._restricted.get(key)
         if first is None:
             first = base[0].restrict_batch(bucket)
@@ -323,21 +328,20 @@ class ESGScheduler(SchedulerPolicy):
         g_slo = max((g_slo - margin) / self.time_inflation, 1.0)
 
         bucket = self._bucket(base[0], max(len(jobs), 1))
-        tables = self._prepared(app.name, stage, base, bucket)
+        tables = self._prepared(funcs, base, bucket)
         # online calibration: plan against per-stage corrected tables;
         # the residual-penalty discount below then uses corrected
         # min_times too (the calibrated prediction of how much of a
         # prefetch the predecessor's execution hides)
         factors = self._factors(app.name, stages)
         if factors is not None:
-            tables = self._corrected(app.name, stage, bucket, tables,
-                                     factors)
+            tables = self._corrected(funcs, bucket, tables, factors)
         # heterogeneous/preemptible fleet: reprice the suffix for SKU
         # speed and expected preemption loss (None on the default fleet,
         # leaving tables and cache keys untouched)
         sku_sig = self._fleet_sig(sim)
         if sku_sig is not None:
-            tables = self._spot_priced(app.name, stage, bucket, factors,
+            tables = self._spot_priced(funcs, bucket, factors,
                                        sku_sig, tables)
         # memory-aware mode: price each remaining stage's predicted
         # weight-swap penalty into the search so the configPQ is ranked
@@ -352,8 +356,8 @@ class ESGScheduler(SchedulerPolicy):
             # invalidation by unreachability); the fleet signature is
             # another (a reclaim/recover changes the signature, making
             # plans priced for the old fleet unreachable, PR-7 style)
-            key = (app.name, stage, bucket, pen_key) if factors is None \
-                else (app.name, stage, bucket, pen_key, factors)
+            key = (funcs, bucket, pen_key) if factors is None \
+                else (funcs, bucket, pen_key, factors)
             if sku_sig is not None:
                 key = key + ("sku", sku_sig)
             results = self.cache.lookup(
@@ -403,22 +407,21 @@ class ESGScheduler(SchedulerPolicy):
         remaining = max(slo - w, 1.0)
         g_slo = max((remaining * quota - margin) / self.time_inflation, 1.0)
         bucket = self._bucket(base[0], max(len(jobs), 1))
-        tables = self._prepared(app.name, stage, base, bucket)
+        tables = self._prepared(funcs, base, bucket)
         # mirror plan() exactly: the certificate must be keyed under the
         # same factor axis, so a calibration step (new factors -> new
         # key) silently invalidates outstanding sparse-skip certificates
         factors = self._factors(app.name, stages)
         if factors is not None:
-            tables = self._corrected(app.name, stage, bucket, tables,
-                                     factors)
+            tables = self._corrected(funcs, bucket, tables, factors)
         sku_sig = self._fleet_sig(sim)
         if sku_sig is not None:
-            tables = self._spot_priced(app.name, stage, bucket, factors,
+            tables = self._spot_priced(funcs, bucket, factors,
                                        sku_sig, tables)
         penalties = self._penalties(sim, funcs, tables)
         pen_key = tuple(penalties) if penalties is not None else None
-        key = (app.name, stage, bucket, pen_key) if factors is None \
-            else (app.name, stage, bucket, pen_key, factors)
+        key = (funcs, bucket, pen_key) if factors is None \
+            else (funcs, bucket, pen_key, factors)
         if sku_sig is not None:
             key = key + ("sku", sku_sig)
         return self.cache.budget_free_token(key, g_slo)

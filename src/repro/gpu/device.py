@@ -145,8 +145,13 @@ class DeviceModel:
                  slices_per_vgpu: int = SLICES_PER_VGPU,
                  shared_weights: bool = False,
                  overlap: bool = False,
-                 sku: Optional[GpuSKU] = None):
+                 sku: Optional[GpuSKU] = None,
+                 validate: bool = True):
         self.sku = sku if sku is not None else DEFAULT_SKU
+        # when False, check() is a no-op: invariants are still upheld by
+        # construction, we just skip re-verifying the ledgers after every
+        # mutation (the dominant cost at day-scale replay)
+        self.validate = validate
         # per-SKU host->HBM bandwidth feeds every swap/cold-load figure
         self._gbps = self.sku.h2d_gbps
         self.vgpus = vgpus
@@ -161,6 +166,11 @@ class DeviceModel:
         self.engine = TransferEngine()
         self.weights: dict[str, WeightSet] = {}
         self._gc_now = -math.inf
+        # earliest expiry across every pooled container (lower bound:
+        # removals may leave it stale-low, which only costs one no-op
+        # sweep) — lets the per-probe _gc skip the pool scan entirely
+        # until simulated time actually crosses an expiry
+        self._next_expiry = math.inf
         self.pools: dict[str, list[WarmContainer]] = defaultdict(list)
         self.allocs: dict[int, Allocation] = {}
         self._aid = itertools.count()
@@ -198,6 +208,9 @@ class DeviceModel:
         if now <= self._gc_now:
             return
         self._gc_now = now
+        if now <= self._next_expiry:
+            return                   # nothing can have expired yet
+        nxt = math.inf
         for func, pool in self.pools.items():
             live, dropped = [], 0
             for c in pool:
@@ -207,10 +220,13 @@ class DeviceModel:
                     self._abandon_transfer(c)
                 else:
                     live.append(c)
+                    if c.expiry < nxt:
+                        nxt = c.expiry
             if dropped:
                 self.pools[func][:] = live
                 if self.shared_weights:
                     self._drop_warm_refs(func, dropped)
+        self._next_expiry = nxt
 
     # ---- transfer-engine bookkeeping (overlap mode) -----------------------
     def _abandon_transfer(self, owner) -> None:
@@ -355,7 +371,7 @@ class DeviceModel:
             if self.shared_weights:
                 if self._resident(func):
                     return True              # shared reuse: no new HBM
-            elif self._hot(func):
+            elif any(c.tier == HOT for c in self.pools[func]):
                 return True                  # hot reuse: no new HBM needed
         need = self._capped(model_mb)
         return need <= self.free_hbm_mb + self._demotable_mb(func)
@@ -440,22 +456,41 @@ class DeviceModel:
             raise OversubscribedError(
                 f"alloc {slices} slices > free {self.free_slices}")
         pool = self.pools[func]
+        # the pool is expiry-sorted, so "min expiry within a tier" is
+        # the first entry of that tier — one early-exit scan, no
+        # per-tier list builds (day-scale pools run hundreds deep)
         hit: Optional[WarmContainer] = None
-        for want_tier in (HOT, WARM):
-            tiered = [c for c in pool if c.tier == want_tier]
-            if tiered:
-                if want_tier == HOT and self.overlap \
-                        and not self.shared_weights:
-                    # prefer a copy whose weights have landed over one
-                    # still in flight (legacy expiry order breaks ties);
-                    # settle the lazy queue first so a prefetch that
-                    # already arrived is not misread as in flight
-                    self.engine._advance(now)
-                    hit = min(tiered, key=lambda c: (
-                        self._in_flight(c.transfer, now), c.expiry))
-                else:
-                    hit = min(tiered, key=lambda c: c.expiry)
-                break
+        if self.overlap and not self.shared_weights:
+            # prefer a hot copy whose weights have landed over one
+            # still in flight (legacy expiry order breaks ties);
+            # settle the lazy queue first so a prefetch that
+            # already arrived is not misread as in flight — but only
+            # when a hot copy exists, as the legacy path did
+            first_warm = advanced = None
+            for c in pool:
+                if c.tier == HOT:
+                    if not advanced:
+                        self.engine._advance(now)
+                        advanced = True
+                    if not self._in_flight(c.transfer, now):
+                        hit = c
+                        break
+                    if hit is None:
+                        hit = c              # earliest in-flight hot
+                elif first_warm is None and c.tier == WARM:
+                    first_warm = c
+            if hit is None:
+                hit = first_warm
+        else:
+            first_warm = None
+            for c in pool:
+                if c.tier == HOT:
+                    hit = c
+                    break
+                if first_warm is None and c.tier == WARM:
+                    first_warm = c
+            if hit is None:
+                hit = first_warm
         if hit is not None:
             pool.remove(hit)
         ready, full = now, 0.0
@@ -633,6 +668,8 @@ class DeviceModel:
             c = WarmContainer(a.func, expiry, a.hbm_mb, HOT)
         pool = self.pools[a.func]
         bisect.insort(pool, c, key=lambda x: x.expiry)
+        if c.expiry < self._next_expiry:
+            self._next_expiry = c.expiry
         self.check()
         return c
 
@@ -727,6 +764,8 @@ class DeviceModel:
             else:
                 c = WarmContainer(func, expiry, 0.0, WARM)
         bisect.insort(self.pools[func], c, key=lambda x: x.expiry)
+        if c.expiry < self._next_expiry:
+            self._next_expiry = c.expiry
         self.check()
         return c
 
@@ -792,6 +831,8 @@ class DeviceModel:
     # ---- invariants -------------------------------------------------------
     def check(self) -> None:
         """Raise OversubscribedError if any invariant is violated."""
+        if not self.validate:
+            return
         used = sum(a.slices for a in self.allocs.values())
         if used != self.used_slices:
             raise OversubscribedError(

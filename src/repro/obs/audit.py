@@ -39,6 +39,43 @@ from typing import Any, Callable, Optional
 # noisy observation for a p90
 MIN_QUANTILE_SAMPLES = 2
 
+# per-(app, stage) cap on retained calibration error samples: beyond
+# this the reservoir thins itself (keep-every-other, stride doubles), so
+# a million-invocation run holds O(cap) floats per stage instead of
+# O(invocations) while quantiles stay exact over a systematic 1-in-2^k
+# subsample of the stream
+CAL_RESERVOIR_CAP = 4096
+
+
+class _ErrAcc:
+    """Streaming predicted-vs-realized error accumulator for one
+    (app, stage): exact count/sums, plus a deterministic
+    systematic-thinning reservoir for quantiles.  No RNG — the kept
+    subsample is every ``stride``-th observation, so replays reproduce
+    it bit-for-bit."""
+    __slots__ = ("n", "sum_err", "sum_abs", "samples", "stride", "_skip")
+
+    def __init__(self):
+        self.n = 0
+        self.sum_err = 0.0
+        self.sum_abs = 0.0
+        self.samples: list[float] = []
+        self.stride = 1
+        self._skip = 0
+
+    def add(self, err: float) -> None:
+        self.n += 1
+        self.sum_err += err
+        self.sum_abs += abs(err)
+        if self._skip:
+            self._skip -= 1
+            return
+        self._skip = self.stride - 1
+        self.samples.append(err)
+        if len(self.samples) >= CAL_RESERVOIR_CAP:
+            del self.samples[1::2]     # keep even ranks, double the step
+            self.stride *= 2
+
 
 @dataclasses.dataclass
 class PlanRecord:
@@ -112,6 +149,9 @@ class AuditLog:
         # realized-record stream: called once per record when its
         # realized latency back-fills (see module docstring)
         self._subscribers: list[Callable[[PlanRecord], None]] = []
+        # streaming calibration state, fed at back-fill time so
+        # calibration() never has to rescan (and retain) every record
+        self._cal: dict[str, _ErrAcc] = {}
 
     def subscribe(self, fn: Callable[[PlanRecord], None]) -> None:
         """Register ``fn`` to receive each plan record the moment its
@@ -143,6 +183,12 @@ class AuditLog:
             return
         rec.realized_ms = realized_ms
         rec.realized_exec_ms = realized_exec_ms
+        if rec.predicted_ms is not None and rec.predicted_ms > 0:
+            err = (realized_ms - rec.predicted_ms) / rec.predicted_ms
+            acc = self._cal.get(f"{rec.app}/{rec.stage}")
+            if acc is None:
+                acc = self._cal[f"{rec.app}/{rec.stage}"] = _ErrAcc()
+            acc.add(err)
         for fn in self._subscribers:
             fn(rec)
 
@@ -183,34 +229,53 @@ class AuditLog:
         reported as None — a "p90" of one sample is that sample, and
         consumers (the calibrator's warmup gate, dashboards) must be
         able to tell the difference.
+
+        Counts and means come from exact streaming accumulators fed at
+        back-fill time; quantiles come from each stage's bounded
+        thinning reservoir (``CAL_RESERVOIR_CAP``), so this holds O(1)
+        floats per stage regardless of trace length.
         """
-        per: dict[str, list[float]] = defaultdict(list)
-        for rec in self.plans:
-            if rec.predicted_ms is None or rec.realized_ms is None \
-                    or rec.predicted_ms <= 0:
-                continue
-            err = (rec.realized_ms - rec.predicted_ms) / rec.predicted_ms
-            per[f"{rec.app}/{rec.stage}"].append(err)
+        accs = self._cal
+        if not accs and self.plans:
+            # fallback for records whose realized_ms was set directly
+            # instead of through on_complete (external tooling): one
+            # bounded scan into throwaway accumulators
+            accs = {}
+            for rec in self.plans:
+                if rec.predicted_ms is None or rec.realized_ms is None \
+                        or rec.predicted_ms <= 0:
+                    continue
+                key = f"{rec.app}/{rec.stage}"
+                acc = accs.get(key)
+                if acc is None:
+                    acc = accs[key] = _ErrAcc()
+                acc.add((rec.realized_ms - rec.predicted_ms)
+                        / rec.predicted_ms)
         out: dict[str, Any] = {}
         all_errs: list[float] = []
-        for key in sorted(per):
-            errs = sorted(per[key])
+        n_total = 0
+        sum_err = sum_abs = 0.0
+        for key in sorted(accs):
+            acc = accs[key]
+            errs = sorted(acc.samples)
             all_errs.extend(errs)
-            quantiled = len(errs) >= MIN_QUANTILE_SAMPLES
+            n_total += acc.n
+            sum_err += acc.sum_err
+            sum_abs += acc.sum_abs
+            quantiled = acc.n >= MIN_QUANTILE_SAMPLES
             out[key] = {
-                "n": len(errs),
-                "mean_err": sum(errs) / len(errs),
-                "mean_abs_err": sum(abs(e) for e in errs) / len(errs),
+                "n": acc.n,
+                "mean_err": acc.sum_err / acc.n,
+                "mean_abs_err": acc.sum_abs / acc.n,
                 "p50_err": self._quantile(errs, 0.50) if quantiled else None,
                 "p90_abs_err": self._quantile(sorted(abs(e) for e in errs),
                                               0.90) if quantiled else None,
             }
         all_errs.sort()
         return {
-            "n": len(all_errs),
-            "mean_err": (sum(all_errs) / len(all_errs)) if all_errs else 0.0,
-            "mean_abs_err": (sum(abs(e) for e in all_errs) / len(all_errs))
-            if all_errs else 0.0,
+            "n": n_total,
+            "mean_err": (sum_err / n_total) if n_total else 0.0,
+            "mean_abs_err": (sum_abs / n_total) if n_total else 0.0,
             "p50_err": self._quantile(all_errs, 0.50) if all_errs else 0.0,
             "p90_abs_err": self._quantile(
                 sorted(abs(e) for e in all_errs), 0.90) if all_errs else 0.0,

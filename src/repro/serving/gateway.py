@@ -69,12 +69,35 @@ class Gateway:
         }
         self.telemetry.fastest_ms = dict(self._fastest_ms)
         sim.admission = self._admit
+        if getattr(sim, "retain", "full") == "stream":
+            # a streaming sim keeps no task list to scan, so dispatches
+            # reach the EWMAs through a feed the sim appends to at
+            # dispatch time — only created when this gateway will
+            # actually drain it (otherwise it would grow unboundedly)
+            self.telemetry.attach_stream(sim)
+            if self.backlog_aware and self.shed_doomed:
+                from collections import deque
+                sim.dispatch_feed = deque()
 
     # ---- queueing-delay model ----------------------------------------------
     def _ingest_dispatches(self) -> None:
         """Fold queue waits of tasks dispatched since the last admission
         decision into the per-stage EWMAs (``sim.tasks`` is appended in
         nondecreasing simulated time, so this is an online pass)."""
+        feed = self.sim.dispatch_feed
+        if feed is not None:
+            # stream mode: the sim pushed (app, stage, wait) per job at
+            # dispatch, in exactly the order the task-list scan below
+            # would visit them — the EWMA folds are bit-identical
+            a = self.qdelay_alpha
+            qd = self._qdelay
+            while feed:
+                app, stage, wait = feed.popleft()
+                key = (app, stage)
+                prev = qd.get(key)
+                qd[key] = wait if prev is None \
+                    else (1.0 - a) * prev + a * wait
+            return
         tasks = self.sim.tasks
         a = self.qdelay_alpha
         while self._tasks_seen < len(tasks):
@@ -128,18 +151,29 @@ class Gateway:
     # ---- injection ---------------------------------------------------------
     def inject(self, scenario: Scenario, n: int, seed: int = 0,
                slo_mult: float = 1.0,
-               app_names: Optional[Sequence[str]] = None) -> dict[str, float]:
+               app_names: Optional[Sequence[str]] = None,
+               stream: bool = False) -> dict[str, float]:
         """Open-loop injection of ``n`` scenario arrivals.
 
         SLOs follow the paper's rule: ``slo_mult`` x the app's
         minimum-configuration end-to-end latency L.  Returns the SLO map.
+
+        ``stream=True`` feeds arrivals lazily through
+        ``sim.add_arrival_stream`` (one pending heap entry at a time,
+        bit-identical replay) instead of materializing ``n``
+        ``AppInstance`` objects up front — the day-scale path.
         """
         sim = self.sim
         app_names = list(app_names or sim.apps)
         slos = {a: slo_mult * min_config_latency(sim.apps[a], sim.profiles)
                 for a in app_names}
-        for arr in scenario.arrivals(app_names, n, seed):
-            sim.add_arrival(arr.app, arr.t_ms, slos[arr.app], arr.uid)
+        if stream:
+            sim.add_arrival_stream(
+                ((arr.app, arr.t_ms, slos[arr.app], arr.uid)
+                 for arr in scenario.arrivals(app_names, n, seed)), n)
+        else:
+            for arr in scenario.arrivals(app_names, n, seed):
+                sim.add_arrival(arr.app, arr.t_ms, slos[arr.app], arr.uid)
         return slos
 
     # ---- results -----------------------------------------------------------

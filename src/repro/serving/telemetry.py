@@ -58,6 +58,21 @@ class LatencyHistogram:
         self.max_ms = max(self.max_ms, ms)
         self._cum = None
 
+    def record_many(self, values) -> None:
+        """Vectorized ``record`` over an array of samples: one
+        searchsorted + bincount instead of a Python loop per sample
+        (bucket counts come out identical; ``total`` may differ from the
+        loop in the last ulp since the sum is reassociated)."""
+        a = np.asarray(values, dtype=np.float64)
+        if a.size == 0:
+            return
+        idx = np.searchsorted(self.bounds, a, side="right")
+        self.counts += np.bincount(idx, minlength=self.counts.size)
+        self.total += float(a.sum())
+        self.n += int(a.size)
+        self.max_ms = max(self.max_ms, float(a.max()))
+        self._cum = None
+
     def merge(self, other: "LatencyHistogram") -> "LatencyHistogram":
         """Fold ``other`` into this histogram in place (sharded-emulator
         aggregation): the result is exactly what recording the union of
@@ -177,6 +192,40 @@ class Telemetry:
                 t_ms or 0.0, app, budget_ms, need_ms or 0.0,
                 fastest_ms or 0.0))
 
+    # ---- streaming collection (retain="stream" sims) -----------------------
+    def attach_stream(self, sim) -> "Telemetry":
+        """Subscribe to a ``retain="stream"`` ClusterSim: per-stage and
+        end-to-end metrics accumulate online at task retirement /
+        request completion, because a streaming sim does not keep the
+        object lists ``collect`` would otherwise scan.  The hooks fire
+        before the sim recycles tasks/jobs through its pools, so the
+        records they read are still intact."""
+        self._done_by_app: dict[str, tuple[list, list]] = {}
+        sim.on_task_retire = self._on_task_retire
+        sim.on_request_done = self._on_request_done
+        return self
+
+    def _on_task_retire(self, task) -> None:
+        st = self.stage[(task.jobs[0].inst.app.name, task.stage)]
+        st.tasks += 1
+        st.jobs += len(task.jobs)
+        st.cold += int(task.cold)
+        st.exec.record(task.end_ms - task.start_ms)
+        start = task.start_ms
+        for j in task.jobs:
+            st.queue.record(max(start - j.ready_ms, 0.0))
+
+    def _on_request_done(self, inst) -> None:
+        lat = inst.finish_ms - inst.arrival_ms
+        self.e2e.record(lat)
+        self.completed += 1
+        self.slo_hits += int(lat <= inst.slo_ms)
+        # (arrival, latency) per app, for retrospective shed scoring —
+        # ~2 floats/request, the only per-request state stream mode keeps
+        arr, lats = self._done_by_app.setdefault(inst.app.name, ([], []))
+        arr.append(inst.arrival_ms)
+        lats.append(lat)
+
     # ---- post-run collection ----------------------------------------------
     def collect(self, sim) -> "Telemetry":
         """Derive stage/app metrics from a finished (or paused) ClusterSim."""
@@ -184,30 +233,34 @@ class Telemetry:
         self.autoscaler = getattr(sim.autoscaler, "name", "?")
         self.cold_starts = sim.cold_starts
         self.total_cost = sim.total_cost
-        horizon = max((t.end_ms for t in sim.tasks), default=0.0)
-        horizon = max(horizon, max((i.finish_ms for i in sim.completed),
-                                   default=0.0))
+        if getattr(sim, "retain", "full") == "stream":
+            # stage/e2e metrics already accumulated via attach_stream
+            horizon = sim._horizon_ms
+        else:
+            horizon = max((t.end_ms for t in sim.tasks), default=0.0)
+            horizon = max(horizon, max((i.finish_ms for i in sim.completed),
+                                       default=0.0))
+            for t in sim.tasks:
+                key = (t.jobs[0].inst.app.name, t.stage)
+                st = self.stage[key]
+                st.tasks += 1
+                st.jobs += len(t.jobs)
+                st.cold += int(t.cold)
+                st.exec.record(t.end_ms - t.start_ms)
+                for j in t.jobs:
+                    st.queue.record(max(t.start_ms - j.ready_ms, 0.0))
+            for inst in sim.completed:
+                lat = inst.finish_ms - inst.arrival_ms
+                self.e2e.record(lat)
+                self.completed += 1
+                self.slo_hits += int(lat <= inst.slo_ms)
         self.horizon_ms = horizon
-        for t in sim.tasks:
-            key = (t.jobs[0].inst.app.name, t.stage)
-            st = self.stage[key]
-            st.tasks += 1
-            st.jobs += len(t.jobs)
-            st.cold += int(t.cold)
-            st.exec.record(t.end_ms - t.start_ms)
-            for j in t.jobs:
-                st.queue.record(max(t.start_ms - j.ready_ms, 0.0))
         # busy time integrates the *actual* fractional quota over time
         # (vertical resizes included), not the dispatched config
         self.gpu_busy_ms = sim.slice_busy_ms / SLICES_PER_VGPU
         cap = sum(inv.vgpus for inv in sim.invokers)
         self.gpu_capacity_ms = cap * horizon
         self.gpu = sim.gpu_summary()
-        for inst in sim.completed:
-            lat = inst.finish_ms - inst.arrival_ms
-            self.e2e.record(lat)
-            self.completed += 1
-            self.slo_hits += int(lat <= inst.slo_ms)
         self._score_sheds(sim)
         rec = getattr(sim, "recorder", None)
         if rec is not None and getattr(rec, "enabled", False):
@@ -225,10 +278,20 @@ class Telemetry:
         """Classify each shed decision as true/false/unknown (see module
         docstring) against the realized latencies of admitted traffic."""
         by_app: dict[str, tuple[list[float], list[float]]] = {}
-        for inst in sorted(sim.completed, key=lambda i: i.arrival_ms):
-            arr, lat = by_app.setdefault(inst.app.name, ([], []))
-            arr.append(inst.arrival_ms)
-            lat.append(inst.finish_ms - inst.arrival_ms)
+        if getattr(sim, "retain", "full") == "stream":
+            # same (arrival, latency) pairs in the same completion order
+            # as sim.completed would hold, so the stable sort yields
+            # arrays identical to the full-retention scan below
+            for app, (arr, lats) in getattr(self, "_done_by_app",
+                                            {}).items():
+                order = sorted(range(len(arr)), key=arr.__getitem__)
+                by_app[app] = ([arr[i] for i in order],
+                               [lats[i] for i in order])
+        else:
+            for inst in sorted(sim.completed, key=lambda i: i.arrival_ms):
+                arr, lat = by_app.setdefault(inst.app.name, ([], []))
+                arr.append(inst.arrival_ms)
+                lat.append(inst.finish_ms - inst.arrival_ms)
         self.shed_true = self.shed_false = self.shed_unknown = 0
         for rec in self.shed_records:
             if rec.budget_ms < rec.fastest_ms:
@@ -247,6 +310,57 @@ class Telemetry:
                 self.shed_true += 1
             else:
                 self.shed_false += 1
+
+    # ---- sharded aggregation ----------------------------------------------
+    def merge(self, other: "Telemetry") -> "Telemetry":
+        """Fold another shard's telemetry into this one in place.
+
+        Every shard owns a disjoint app population and invoker
+        sub-fleet, so counters/costs/busy-time add, histograms merge
+        exactly (``LatencyHistogram.merge``), peaks take the max, and
+        shed scoring — already exact per shard, since a shed's scoring
+        neighbours are same-app completions and an app lives in exactly
+        one shard — adds.  Per-shard diagnostic blocks
+        (``predicted_vs_realized`` / ``calibration`` / ``health``) are
+        not combined; consumers read those from the per-shard exports."""
+        for mine, theirs in ((self.injected, other.injected),
+                             (self.admitted, other.admitted),
+                             (self.shed, other.shed)):
+            for app, c in theirs.items():
+                mine[app] += c
+        for key, st in other.stage.items():
+            m = self.stage[key]
+            m.queue.merge(st.queue)
+            m.exec.merge(st.exec)
+            m.jobs += st.jobs
+            m.tasks += st.tasks
+            m.cold += st.cold
+        self.e2e.merge(other.e2e)
+        self.slo_hits += other.slo_hits
+        self.completed += other.completed
+        self.cold_starts += other.cold_starts
+        self.total_cost += other.total_cost
+        self.gpu_busy_ms += other.gpu_busy_ms
+        self.gpu_capacity_ms += other.gpu_capacity_ms
+        self.horizon_ms = max(self.horizon_ms, other.horizon_ms)
+        if not self.scheduler:
+            self.scheduler, self.autoscaler, self.scenario = \
+                other.scheduler, other.autoscaler, other.scenario
+        self.fastest_ms.update(other.fastest_ms)
+        self.shed_records.extend(other.shed_records)
+        self.shed_true += other.shed_true
+        self.shed_false += other.shed_false
+        self.shed_unknown += other.shed_unknown
+        # device counters are fleet sums except the HBM peak (fleet max:
+        # max over shard maxes == max over the union fleet)
+        for k, v in other.gpu.items():
+            if k == "hbm_peak_mb":
+                self.gpu[k] = max(self.gpu.get(k, 0.0), v)
+            elif isinstance(v, (int, float)):
+                self.gpu[k] = self.gpu.get(k, 0) + v
+            else:
+                self.gpu.setdefault(k, v)
+        return self
 
     def shed_precision(self) -> Optional[float]:
         """True sheds over scored sheds; None when nothing was scorable."""

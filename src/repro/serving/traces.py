@@ -30,6 +30,7 @@ Add a scenario by subclassing ``Scenario`` (override ``_interval``, or
 from __future__ import annotations
 
 import dataclasses
+import gzip
 import math
 import zlib
 from typing import Callable, Iterable, Optional, Sequence
@@ -68,18 +69,24 @@ class Scenario:
         raise NotImplementedError
 
     # ---- public API -------------------------------------------------------
-    def arrivals(self, app_names: Sequence[str], n: int,
-                 seed: int = 0) -> list[Arrival]:
+    def iter_arrivals(self, app_names: Sequence[str], n: int,
+                      seed: int = 0):
+        """Lazy generator form of ``arrivals`` — the identical sequence,
+        one ``Arrival`` at a time (the day-scale streaming path: feed it
+        to ``ClusterSim.add_arrival_stream`` and no arrival list is ever
+        materialized)."""
         rng = np.random.default_rng(seed)
         self._reset(rng, n)
         probs = self._mix(app_names)
         t = 0.0
-        out = []
         for uid in range(n):
             t += max(float(self._interval(rng, uid, t)), 1e-6)
             app = app_names[int(rng.choice(len(app_names), p=probs))]
-            out.append(Arrival(uid, t, app))
-        return out
+            yield Arrival(uid, t, app)
+
+    def arrivals(self, app_names: Sequence[str], n: int,
+                 seed: int = 0) -> list[Arrival]:
+        return list(self.iter_arrivals(app_names, n, seed))
 
     def _mix(self, app_names: Sequence[str]) -> np.ndarray:
         if not self.app_weights:
@@ -238,22 +245,33 @@ class TraceReplayScenario(Scenario):
 
     def __init__(self, csv_path: Optional[str] = None,
                  rows: Optional[Iterable[tuple[float, str]]] = None,
-                 time_scale: float = 1.0, speedup: float = 1.0, **kw):
+                 time_scale: float = 1.0, speedup: float = 1.0,
+                 presorted: bool = False, **kw):
         super().__init__(**kw)
         if not speedup > 0.0:          # also rejects NaN
             raise ValueError(
                 f"trace-replay: speedup must be > 0 (it divides the "
                 f"trace clock; 10.0 replays 10x faster), got {speedup!r}")
-        if rows is None and csv_path is not None:
-            rows = self.iter_csv(csv_path)
-        if rows is None:
-            rows = DEFAULT_TRACE_ROWS
-        # ``rows`` may be any iterable (including the lazy CSV reader):
-        # it is consumed exactly once, straight into the sorted trace —
-        # the only materialization an hour-long Azure trace ever gets
-        self.rows = sorted((float(t), str(app)) for t, app in rows)
-        if not self.rows:
-            raise ValueError("trace-replay: empty trace")
+        self.csv_path = csv_path
+        # presorted + csv_path: never materialize — each arrivals() lap
+        # streams the file from disk (the day-scale path; the file must
+        # already be in ``sorted((t_ms, app))`` order, as
+        # ``convert_azure.py`` emits, and may be gzip-compressed)
+        self.presorted = bool(presorted and csv_path is not None
+                              and rows is None)
+        if self.presorted:
+            self.rows = None
+        else:
+            if rows is None and csv_path is not None:
+                rows = self.iter_csv(csv_path)
+            if rows is None:
+                rows = DEFAULT_TRACE_ROWS
+            # ``rows`` may be any iterable (including the lazy CSV
+            # reader): it is consumed exactly once, straight into the
+            # sorted trace
+            self.rows = sorted((float(t), str(app)) for t, app in rows)
+            if not self.rows:
+                raise ValueError("trace-replay: empty trace")
         self.speedup = speedup
         self.time_scale = time_scale / speedup
 
@@ -270,7 +288,8 @@ class TraceReplayScenario(Scenario):
         ``t_ms``, raises a ``ValueError`` naming the file and line
         instead of a bare ``KeyError``."""
         import csv as _csv
-        with open(path, newline="") as f:
+        opener = gzip.open if str(path).endswith(".gz") else open
+        with opener(path, "rt", newline="") as f:
             reader = _csv.DictReader(f)
             if reader.fieldnames is None or \
                     not {"t_ms", "app"} <= set(reader.fieldnames):
@@ -300,24 +319,50 @@ class TraceReplayScenario(Scenario):
         """Materialized form of ``iter_csv`` (back-compat helper)."""
         return list(TraceReplayScenario.iter_csv(path))
 
-    def arrivals(self, app_names: Sequence[str], n: int,
-                 seed: int = 0) -> list[Arrival]:
+    def _lap_rows(self):
+        """One pass over the trace: the materialized sorted rows, or —
+        presorted streaming mode — a fresh lazy read of the CSV."""
+        if self.rows is not None:
+            return iter(self.rows)
+        return self.iter_csv(self.csv_path)
+
+    def iter_arrivals(self, app_names: Sequence[str], n: int,
+                      seed: int = 0):
+        """Identical to the materialized replay (seeds never matter, by
+        design); in presorted mode the file is re-read per wrap lap and
+        the wrap period falls out of lap 0's last row/count — exactly
+        the ``rows[-1]``/``len(rows)`` the materialized path uses."""
         known = set(app_names)
-        span = self.rows[-1][0] + \
-            max(self.rows[-1][0] / len(self.rows), 1.0)   # wrap period
-        out = []
         t_prev = 0.0
-        for uid in range(n):
-            lap, i = divmod(uid, len(self.rows))
-            t_raw, app = self.rows[i]
-            t = (t_raw + lap * span) * self.time_scale
-            t = max(t, t_prev + 1e-6)                     # strictly increasing
-            t_prev = t
-            if app not in known:
-                app = app_names[zlib.crc32(f"{app}/{uid}".encode())
-                                % len(app_names)]
-            out.append(Arrival(uid, t, app))
-        return out
+        uid = 0
+        lap = 0
+        span = 0.0                     # unused on lap 0
+        while uid < n:
+            count = 0
+            prev_raw = -math.inf
+            last_raw = 0.0
+            for t_raw, app in self._lap_rows():
+                if t_raw < prev_raw:
+                    raise ValueError(
+                        f"{self.csv_path}: presorted trace is not "
+                        f"time-sorted (t_ms={t_raw} after {prev_raw})")
+                prev_raw = last_raw = t_raw
+                count += 1
+                t = (t_raw + lap * span) * self.time_scale
+                t = max(t, t_prev + 1e-6)             # strictly increasing
+                t_prev = t
+                if app not in known:
+                    app = app_names[zlib.crc32(f"{app}/{uid}".encode())
+                                    % len(app_names)]
+                yield Arrival(uid, t, app)
+                uid += 1
+                if uid >= n:
+                    return
+            if count == 0:
+                raise ValueError("trace-replay: empty trace")
+            if lap == 0:
+                span = last_raw + max(last_raw / count, 1.0)  # wrap period
+            lap += 1
 
 
 class SpotStormScenario(Scenario):

@@ -438,17 +438,18 @@ def test_plan_cache_keys_grow_factor_axis_on_publish(tables):
         for n, p in PAPER_FUNCTIONS.items()}
     _, _, sched_off = _run(skewed, "mmpp", n=20,
                            recorder=Recorder(trace=False))
-    assert all(len(k) == 4 for k in sched_off.cache._entries)
+    # shape keys: (funcs, bucket, pen_key) uncalibrated
+    assert all(len(k) == 3 for k in sched_off.cache._entries)
     cal = ProfileCalibrator(min_samples=3)
     _, _, sched_on = _run(skewed, "mmpp", n=60,
                           recorder=Recorder(trace=False), calibrator=cal)
     keys = list(sched_on.cache._entries)
     assert cal.updates > 0
-    assert any(len(k) == 5 for k in keys), \
+    assert any(len(k) == 4 for k in keys), \
         "no factor-keyed plan ever cached despite published corrections"
     # the factor axis is the published tuple itself
-    five = [k for k in keys if len(k) == 5]
-    assert all(isinstance(k[4], tuple) for k in five)
+    four = [k for k in keys if len(k) == 4]
+    assert all(isinstance(k[3], tuple) for k in four)
 
 
 class _AlwaysFiring:

@@ -1,0 +1,293 @@
+"""Sharded replay engine: fidelity, determinism, exact merge.
+
+The claims under test (the same ones ``benchmarks/replay_bench.py``
+commits at scale):
+
+  * 1-shard sharded == legacy single-process emulator, bit-identical
+    (schedule digests), on every planner-bench scenario — streaming
+    retention, pooled tasks and lazy arrivals change no arithmetic;
+  * for a fixed shard count, worker processes are pure mechanism:
+    parallel == sequential, digest for digest;
+  * the merge is exact: counters add, histograms fold, nothing is
+    approximated twice;
+  * ``LatencyHistogram.merge`` is partition-invariant at day scale;
+  * the calibration reservoir in the audit log is bounded and keeps
+    exact first moments.
+"""
+from __future__ import annotations
+
+import gzip
+import math
+
+import numpy as np
+import pytest
+
+from repro.cluster.emulator import ClusterSim
+from repro.cluster.shard import (ReplayConfig, fleet_split, make_apps,
+                                 merge_results, paper_tables, run_shard,
+                                 run_sharded, shard_of, shard_seed)
+from repro.core.profiles import PAPER_FUNCTIONS
+from repro.core.scheduler import ESGScheduler
+from repro.core.workflows import PAPER_APPS
+from repro.serving import Gateway, get_autoscaler, get_scenario
+from repro.serving.telemetry import LatencyHistogram
+from repro.serving.traces import TraceReplayScenario
+
+SCENARIOS = ["uniform-normal", "diurnal", "mmpp", "flash-crowd",
+             "azure-tail", "trace-replay"]
+
+
+def _scenario_kw(name: str):
+    if name == "trace-replay":
+        rows = [((i + 1) * 37.5, "unknown-fn-%d" % (i % 7))
+                for i in range(64)]
+        return {"rows": rows, "speedup": 2.0}
+    return {}
+
+
+def _legacy_sim(cfg: ReplayConfig, retain: str = "full",
+                stream_arrivals: bool = False):
+    """The pre-sharding path: one ClusterSim over the paper apps."""
+    tables = paper_tables()
+    sched = ESGScheduler(dict(PAPER_APPS), tables, plan_cache=True,
+                         vectorized=True)
+    sim = ClusterSim(dict(PAPER_APPS), tables, PAPER_FUNCTIONS, sched,
+                     n_invokers=cfg.n_invokers, noise_sigma=cfg.noise_sigma,
+                     seed=cfg.seed, count_overhead=False,
+                     autoscaler=get_autoscaler("ewma"), sparse=True,
+                     retain=retain, track_digest=True)
+    gw = Gateway(sim)
+    sc = get_scenario(cfg.scenario, app_names=list(PAPER_APPS),
+                      **dict(cfg.scenario_kw))
+    gw.inject(sc, cfg.n, seed=cfg.seed + 1, slo_mult=cfg.slo_mult,
+              stream=stream_arrivals)
+    sim.run()
+    gw.telemetry.collect(sim)
+    return sim, gw
+
+
+# ---------------------------------------------------------------------------
+# fidelity: 1 shard == legacy
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("name", SCENARIOS)
+def test_one_shard_matches_legacy(name):
+    cfg = ReplayConfig(scenario=name, scenario_kw=_scenario_kw(name),
+                       n=300, seed=7)
+    r = run_shard(cfg, 0, 1)
+    sim, _ = _legacy_sim(cfg)
+    assert r.digest == sim.run_digest()
+    assert r.summary["completed"] == sim.summary()["completed"]
+    assert r.summary["shed"] == sim.summary()["shed"]
+
+
+def test_stream_retention_digest_matches_full():
+    cfg = ReplayConfig(scenario="azure-tail", n=400, seed=11)
+    full, _ = _legacy_sim(cfg, retain="full")
+    stream, gw = _legacy_sim(cfg, retain="stream")
+    assert full.run_digest() == stream.run_digest()
+    fs, ss = full.summary(), stream.summary()
+    assert fs["completed"] == ss["completed"]
+    assert fs["shed"] == ss["shed"]
+    assert fs["total_cost"] == pytest.approx(ss["total_cost"], rel=0, abs=0)
+    assert fs["slo_hit_rate"] == pytest.approx(ss["slo_hit_rate"])
+    assert fs["mean_latency_ms"] == pytest.approx(ss["mean_latency_ms"])
+    # stream mode keeps O(1) state: nothing retained, pools populated
+    assert stream.tasks == [] and stream.completed == []
+    assert len(stream._task_pool) > 0
+
+
+def test_lazy_arrival_stream_matches_preinjected():
+    cfg = ReplayConfig(scenario="mmpp", n=400, seed=13)
+    pre, _ = _legacy_sim(cfg, stream_arrivals=False)
+    lazy, _ = _legacy_sim(cfg, stream_arrivals=True)
+    assert pre.run_digest() == lazy.run_digest()
+
+
+# ---------------------------------------------------------------------------
+# workers are mechanism: parallel == sequential
+# ---------------------------------------------------------------------------
+def test_parallel_equals_sequential():
+    cfg = ReplayConfig(scenario="azure-tail", n=1500, n_apps=12, seed=5)
+    seq = run_sharded(cfg, 3, workers=1)
+    par = run_sharded(cfg, 3, workers=3)
+    assert seq["digest"] == par["digest"]
+    for a, b in zip(seq["per_shard"], par["per_shard"]):
+        assert a["digest"] == b["digest"]
+        assert a["completed"] == b["completed"]
+    assert seq["completed"] == par["completed"]
+    assert seq["slo_attainment"] == pytest.approx(par["slo_attainment"],
+                                                  rel=0, abs=0)
+    assert seq["total_cost"] == pytest.approx(par["total_cost"],
+                                              rel=0, abs=0)
+
+
+def test_merge_is_exact():
+    cfg = ReplayConfig(scenario="azure-tail", n=1200, n_apps=8, seed=9)
+    results = [run_shard(cfg, i, 2) for i in range(2)]
+    merged = merge_results(results)
+    # the union of per-shard arrival slices is the whole trace
+    assert merged["arrivals"] == cfg.n
+    assert merged["completed"] + merged["shed"] == cfg.n
+    assert merged["completed"] == sum(r.summary["completed"]
+                                      for r in results)
+    assert merged["total_cost"] == pytest.approx(
+        sum(r.summary["total_cost"] for r in results), rel=0, abs=1e-9)
+    assert merged["cold_starts"] == sum(r.summary["cold_starts"]
+                                        for r in results)
+    # merged e2e histogram holds every completion exactly once
+    tel_n = sum(r.telemetry.e2e.n for r in results)
+    assert tel_n == merged["completed"]
+
+
+# ---------------------------------------------------------------------------
+# partitioning machinery
+# ---------------------------------------------------------------------------
+def test_shard_partition_is_disjoint_and_total():
+    apps = make_apps(37)
+    assert len(apps) == 37
+    for n_shards in (2, 3, 5):
+        owned = [set() for _ in range(n_shards)]
+        for a in apps:
+            owned[shard_of(a, n_shards)].add(a)
+        assert set().union(*owned) == set(apps)
+        assert sum(len(o) for o in owned) == len(apps)
+        assert fleet_split(16, n_shards) and \
+            sum(fleet_split(16, n_shards)) == 16
+
+
+def test_fleet_split_rejects_empty_shards():
+    with pytest.raises(ValueError, match="empty shard fleets"):
+        fleet_split(4, 8)
+
+
+def test_shard_seed_identity_at_one_shard():
+    assert shard_seed(42, 0, 1) == 42
+    assert shard_seed(42, 0, 2) != shard_seed(42, 1, 2)
+
+
+def test_make_apps_none_is_paper_apps():
+    assert make_apps(None) == dict(PAPER_APPS)
+    clones = make_apps(8)
+    # clones share function suffixes with their prototypes (plan-cache
+    # shape sharing depends on it)
+    protos = list(PAPER_APPS.values())
+    for k, (name, wf) in enumerate(clones.items()):
+        proto = protos[k % len(protos)]
+        assert [wf.func_of[s] for s in wf.stages] == \
+            [proto.func_of[s] for s in proto.stages]
+
+
+# ---------------------------------------------------------------------------
+# histogram merge: partition-invariant at day scale
+# ---------------------------------------------------------------------------
+def test_histogram_merge_random_partition_day_scale():
+    rng = np.random.default_rng(0)
+    values = rng.lognormal(mean=5.0, sigma=1.2, size=1_000_000)
+    whole = LatencyHistogram()
+    whole.record_many(values)
+    parts = [LatencyHistogram() for _ in range(8)]
+    assign = rng.integers(0, 8, size=values.size)
+    for i, h in enumerate(parts):
+        h.record_many(values[assign == i])
+    merged = LatencyHistogram()
+    for h in parts:
+        merged.merge(h)
+    assert merged.n == whole.n == values.size
+    assert np.array_equal(merged.counts, whole.counts)
+    assert merged.total == pytest.approx(whole.total, rel=1e-9)
+    assert merged.max_ms == whole.max_ms
+    for q in (50, 95, 99):
+        assert merged.percentile(q) == whole.percentile(q)
+
+
+def test_record_many_matches_record_loop():
+    vals = [0.0, 1.0, 3.7, 99.9, 1e6, 5.0, 5.0]
+    a, b = LatencyHistogram(), LatencyHistogram()
+    a.record_many(np.asarray(vals))
+    for v in vals:
+        b.record(v)
+    assert np.array_equal(a.counts, b.counts)
+    assert a.n == b.n and a.total == pytest.approx(b.total)
+    assert a.max_ms == b.max_ms
+
+
+# ---------------------------------------------------------------------------
+# audit-log calibration reservoir: bounded, exact first moments
+# ---------------------------------------------------------------------------
+def test_audit_reservoir_bounded_with_exact_moments():
+    from repro.obs.audit import CAL_RESERVOIR_CAP, _ErrAcc
+    acc = _ErrAcc()
+    rng = np.random.default_rng(1)
+    errs = rng.normal(0.0, 0.3, size=100_000)
+    for e in errs:
+        acc.add(float(e))
+    assert acc.n == errs.size
+    assert len(acc.samples) <= CAL_RESERVOIR_CAP
+    assert acc.sum_err == pytest.approx(float(errs.sum()), rel=1e-9)
+    assert acc.sum_abs == pytest.approx(float(np.abs(errs).sum()),
+                                        rel=1e-9)
+    # deterministic: same inputs, same retained reservoir
+    acc2 = _ErrAcc()
+    for e in errs:
+        acc2.add(float(e))
+    assert acc.samples == acc2.samples
+
+
+# ---------------------------------------------------------------------------
+# presorted trace streaming
+# ---------------------------------------------------------------------------
+def _write_trace(path, rows, compress=False):
+    opener = gzip.open if compress else open
+    with opener(path, "wt", newline="") as f:
+        f.write("t_ms,app\n")
+        for t, a in rows:
+            f.write(f"{t},{a}\n")
+
+
+@pytest.mark.parametrize("compress", [False, True])
+def test_presorted_streaming_matches_materialized(tmp_path, compress):
+    rows = [(i * 11.0, f"fn{i % 5}") for i in range(200)]
+    p = tmp_path / ("t.csv.gz" if compress else "t.csv")
+    _write_trace(str(p), rows, compress)
+    apps = list(PAPER_APPS)
+    mat = TraceReplayScenario(csv_path=str(p)).arrivals(apps, 450, seed=0)
+    streamed = list(TraceReplayScenario(csv_path=str(p), presorted=True)
+                    .iter_arrivals(apps, 450, seed=0))
+    assert [(a.t_ms, a.app, a.uid) for a in mat] == \
+        [(a.t_ms, a.app, a.uid) for a in streamed]
+
+
+def test_presorted_rejects_unsorted_trace(tmp_path):
+    p = tmp_path / "bad.csv"
+    _write_trace(str(p), [(100.0, "a"), (50.0, "b")])
+    sc = TraceReplayScenario(csv_path=str(p), presorted=True)
+    with pytest.raises(ValueError, match="not time-sorted"):
+        list(sc.iter_arrivals(list(PAPER_APPS), 2, seed=0))
+
+
+# ---------------------------------------------------------------------------
+# guard rails
+# ---------------------------------------------------------------------------
+def test_stream_retention_rejects_recorder():
+    from repro.obs import Recorder
+    tables = paper_tables()
+    sched = ESGScheduler(dict(PAPER_APPS), tables)
+    with pytest.raises(ValueError, match="stream"):
+        ClusterSim(dict(PAPER_APPS), tables, PAPER_FUNCTIONS, sched,
+                   retain="stream", recorder=Recorder())
+
+
+def test_arrival_stream_rejects_double_attach():
+    tables = paper_tables()
+    sched = ESGScheduler(dict(PAPER_APPS), tables)
+    sim = ClusterSim(dict(PAPER_APPS), tables, PAPER_FUNCTIONS, sched)
+    app = next(iter(PAPER_APPS))
+    sim.add_arrival_stream(iter([(app, 1.0, 1e4, 0)]), 4)
+    with pytest.raises(ValueError):
+        sim.add_arrival_stream(iter([(app, 2.0, 1e4, 1)]), 4)
+
+
+def test_record_requires_full_retention():
+    cfg = ReplayConfig(scenario="azure-tail", n=10, record=True)
+    with pytest.raises(ValueError, match="retain='full'"):
+        run_shard(cfg, 0, 1)
