@@ -325,6 +325,13 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
         print(f"[replay-bench] GUARD FAIL: {f}")
     if args.smoke:
         print(json.dumps(doc["smoke"], indent=1, default=str)[:2000])
+        if args.update:
+            # smoke-scale baseline: meta.smoke records the scale, and the
+            # guard-mode drift check only compares keys the baseline has
+            BASELINE.write_text(json.dumps(doc, indent=1, sort_keys=True,
+                                           default=str) + "\n")
+            print(f"[replay-bench] smoke-scale baseline written "
+                  f"-> {BASELINE}")
         return 1 if fails else 0
     if args.update:
         BASELINE.write_text(json.dumps(doc, indent=1, sort_keys=True,

@@ -1,14 +1,20 @@
-"""Quickstart: serve a small model with ESG-batched requests (real compute).
+"""Quickstart: serve a small model through the full control plane
+(real compute).
 
-Requests arrive on an AFW queue; ESG_1Q picks batch sizes from a measured
-profile lattice; real JAX prefill+decode steps serve each dispatched batch.
+Scenario arrivals enter via the Gateway, ESG_1Q plans batch sizes from a
+measured profile lattice, and every dispatched batch runs real Pallas
+prefill + scalar-prefetch decode via the compile-cached RealExecutor.
 
   PYTHONPATH=src python examples/quickstart.py
 """
 from repro.launch.serve import serve_real
 
 if __name__ == "__main__":
-    out = serve_real(arch="internlm2_1_8b", n_requests=24, slo_ms=30_000,
-                     mean_interval_ms=30.0, gen_len=4, prompt_len=32)
-    print(f"served {out['n']} requests: hit={out['hit_rate']:.2f} "
-          f"p50={out['p50_ms']:.0f}ms p95={out['p95_ms']:.0f}ms")
+    out = serve_real(arch="internlm2_1_8b", n_requests=24,
+                     batches=(1, 2, 4), quotas=(1.0,),
+                     gen_len=4, prompt_len=32, reps=1)
+    ex = out["executor"]
+    print(f"served {out['n_requests']} requests: "
+          f"executed={ex['executed']} batches, "
+          f"compile-cache hit rate={ex['post_warmup_hit_rate']:.2f}, "
+          f"predicted-vs-measured err={out['mean_abs_err']:.1%}")

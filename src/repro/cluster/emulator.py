@@ -307,7 +307,8 @@ class ClusterSim:
                  retry_backoff_ms: float = 250.0,
                  retain: str = "full",
                  track_digest: bool = False,
-                 device_checks: bool = True):
+                 device_checks: bool = True,
+                 executor: Any = None):
         if retain not in ("full", "stream"):
             raise ValueError(f"retain must be 'full' or 'stream', "
                              f"got {retain!r}")
@@ -385,6 +386,12 @@ class ClusterSim:
                              "per-task spans; use retain='full')")
         if self.recorder.enabled:
             self.recorder.bind_sim(self)
+        # real-compute bridge (repro.serving.executor): when set, every
+        # dispatched task is additionally executed for real on-device,
+        # asynchronously.  None (the default) is free and replays
+        # bit-identically — the emulator's simulated clock never reads
+        # the executor's wall clock.
+        self.executor = executor
         self.noise_sigma = noise_sigma
         self.rng = np.random.default_rng(seed)
         self.count_overhead = count_overhead
@@ -1345,6 +1352,10 @@ class ClusterSim:
         self.push_event(end, "complete", (task, task.gen))
         if self.recorder.enabled:
             self.recorder.on_dispatch(self, task)
+        if self.executor is not None:
+            # real-compute bridge: run the dispatched batch on-device,
+            # async — simulated time is never coupled to device wall time
+            self.executor.submit(task)
         # warm-pool policy hook: reactive scale-up / pre-warm scheduling /
         # scale-down all live in repro.serving.autoscaler
         self.autoscaler.on_dispatch(self, func, inv_idx, cold,

@@ -62,6 +62,11 @@ class FunctionProfile:
     # intermediate-state checkpoint a preempted task can resume from
     # (0 => no checkpointing: a spot reclamation re-runs from scratch)
     checkpoint_mb: float = 0.0
+    # where the numbers came from: "zoo" (hand-entered / analytical) or
+    # "measured" (timed real-kernel execution, see launch/profile_kernels)
+    # — threaded through Telemetry.summary() and the planner audit log so
+    # every export names its latency ground truth
+    provenance: str = "zoo"
 
     def quota_factor(self, c: Config, quota_vgpu: Optional[float]) -> float:
         """GPU-part slowdown when the running container's compute quota
@@ -101,6 +106,51 @@ class FunctionProfile:
 
     def job_cost(self, c: Config) -> float:
         return self.cost(c) / c.batch
+
+
+@dataclasses.dataclass(frozen=True)
+class MeasuredFunctionProfile(FunctionProfile):
+    """Profile backed by a measured (batch, quota) latency lattice.
+
+    ``lattice`` holds ``(batch, quota, exec_ms)`` triples timed on real
+    kernel execution (``launch/profile_kernels.py``).  ``exec_ms``
+    answers from the lattice instead of the analytical model: the batch
+    rounds *up* to the nearest measured bucket — coherent with the
+    real-compute executor, which pads dispatched batches to the same
+    buckets so each (arch, stage, bucket, quota) cell compiles exactly
+    once — and an unmeasured quota falls back to the measured full-quota
+    cell scaled by the analytical ``quota_factor``.
+    """
+    lattice: tuple = ()          # ((batch, quota, exec_ms), ...)
+    provenance: str = "measured"
+
+    def __post_init__(self):
+        cells = {(int(b), float(q)): float(ms) for b, q, ms in self.lattice}
+        object.__setattr__(self, "_cells", cells)
+        object.__setattr__(self, "_buckets",
+                           tuple(sorted({b for b, _ in cells})))
+
+    def _bucket(self, batch: int) -> int:
+        for b in self._buckets:
+            if batch <= b:
+                return b
+        return self._buckets[-1]
+
+    def exec_ms(self, c: Config,
+                quota_vgpu: Optional[float] = None) -> float:
+        if not self._buckets:
+            return super().exec_ms(c, quota_vgpu)
+        bucket = self._bucket(c.batch)
+        # waves beyond the largest measured bucket run back to back
+        waves = int(np.ceil(c.batch / bucket)) if c.batch > bucket else 1
+        q = (quota_vgpu / c.vgpu) if quota_vgpu is not None else 1.0
+        ms = self._cells.get((bucket, round(q, 6)))
+        if ms is None:
+            base = self._cells.get((bucket, 1.0))
+            if base is None:
+                return super().exec_ms(c, quota_vgpu)
+            ms = base * self.quota_factor(c, quota_vgpu)
+        return ms * waves
 
 
 # ---------------------------------------------------------------------------
@@ -146,6 +196,33 @@ class ProfileTable:
                    [cfgs[i] for i in order],
                    times[order],
                    costs[order])
+
+    @classmethod
+    def from_measured(cls, artifact: dict) -> "ProfileTable":
+        """Build a table from a measured-profile JSON artifact
+        (``launch/profile_kernels.py`` schema ``repro.measured_profile.v1``).
+
+        The config lattice is the measured batch lattice at (vcpu=1,
+        vgpu=1) — the single-host serving shape the artifact was timed
+        on; fractional quotas live on the profile's quota axis and are
+        reached through ``exec_ms(c, quota_vgpu=...)``, mirroring how
+        the emulator delivers vertical resizes."""
+        cells = artifact["cells"]
+        lattice = tuple((c["batch"], c["quota"], c["e2e_ms"])
+                        for c in cells)
+        full = {c["batch"]: c["e2e_ms"] for c in cells
+                if c["quota"] == 1.0}
+        if not full:
+            raise ValueError("measured artifact has no quota=1.0 cells")
+        fn = MeasuredFunctionProfile(
+            name=artifact["arch"],
+            t1_ms=full[min(full)],
+            cold_ms=float(artifact.get("cold_ms", 0.0)),
+            input_mb=float(artifact.get("input_mb", 0.01)),
+            model_mb=float(artifact.get("model_mb", 0.0)),
+            lattice=lattice)
+        return cls.build(fn, batches=tuple(sorted(full)), vcpus=(1,),
+                         vgpus=(1,))
 
     def restrict_batch(self, max_batch: int) -> "ProfileTable":
         keep = [i for i, c in enumerate(self.configs) if c.batch <= max_batch]

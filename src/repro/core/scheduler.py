@@ -321,7 +321,8 @@ class ESGScheduler(SchedulerPolicy):
                     t_ms=now, app=app.name, stage=stage, n_jobs=len(jobs),
                     g_slo_ms=0.0, regime="sunk", expansions=0,
                     pruned_time=0, pruned_cost=0, est_time_ms=None,
-                    est_job_cost=None, slack_ms=None, n_candidates=1))
+                    est_job_cost=None, slack_ms=None, n_candidates=1,
+                    provenance=base[0].fn.provenance))
             return [self._cheapest_config(funcs[0], len(jobs))]
         remaining = max(slo - w, 1.0)
         g_slo = remaining * quota
@@ -384,7 +385,8 @@ class ESGScheduler(SchedulerPolicy):
                 est_time_ms=best.est_time_ms,
                 est_job_cost=best.est_job_cost,
                 slack_ms=g_slo - best.est_time_ms,
-                n_candidates=len(out)))
+                n_candidates=len(out),
+                provenance=base[0].fn.provenance))
         return out
 
     # -- event-sparse emulator hook ----------------------------------------

@@ -77,6 +77,107 @@ def _fd_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
         o_ref[0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
 
 
+def _fd_dyn_kernel(t_ref, q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref,
+                   *, scale: float, window, local_block,
+                   block_k: int, kv_len: int, n_rep: int):
+    """Dynamic-position variant: ``t`` arrives as a scalar-prefetch ref
+    (SMEM) instead of a Python int baked into the trace, so one compiled
+    executable serves every decode step — the per-token recompile the
+    static kernel would force is exactly what the serving executor's
+    compile cache must never see."""
+    t = t_ref[0]
+    kb = pl.program_id(1)
+    n_kv = pl.num_programs(1)
+
+    @pl.when(kb == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0].astype(jnp.float32) * scale            # (H, D)
+    k = k_ref[0].astype(jnp.float32)                    # (bk, KV, D)
+    v = v_ref[0].astype(jnp.float32)
+
+    slots = kb * block_k + jax.lax.broadcasted_iota(
+        jnp.int32, (block_k,), 0)
+    if window is None and local_block is None:
+        kv_pos = slots                                  # linear cache
+        valid = kv_pos <= t
+    else:
+        w = kv_len
+        kv_pos = t - ((t - slots) % w)                  # ring cache
+        valid = kv_pos >= 0
+        if window is not None:
+            valid &= (t - kv_pos) < window
+        if local_block is not None:
+            valid &= kv_pos >= (t // local_block) * local_block
+    valid &= slots < kv_len
+
+    k2 = jnp.repeat(k, n_rep, axis=1) if n_rep > 1 else k   # (bk, H, D)
+    v2 = jnp.repeat(v, n_rep, axis=1) if n_rep > 1 else v
+    sc = jnp.einsum("hd,khd->hk", q, k2,
+                    preferred_element_type=jnp.float32)          # (H, bk)
+    sc = jnp.where(valid[None, :], sc, NEG_INF)
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, sc.max(axis=1))
+    p = jnp.exp(sc - m_new[:, None])
+    alpha = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * alpha + p.sum(axis=1)
+    v2 = jnp.where(valid[:, None, None], v2, 0.0)
+    pv = jnp.einsum("hk,khd->hd", p, v2,
+                    preferred_element_type=jnp.float32)
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + pv
+    m_ref[...] = m_new
+
+    @pl.when(kb == n_kv - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def flash_decode_dynamic(q, k_cache, v_cache, t, *, window=None,
+                         local_block=None, block_k=512, interpret=False):
+    """Like :func:`flash_decode`, but ``t`` is a traced int32 scalar
+    delivered via scalar prefetch — jit once, decode every position.
+
+    q: (B, H, D); caches: (B, S, KV, D); t: int32 array (any 0/1-d shape).
+    Returns (B, H, D)."""
+    b, h, d = q.shape
+    s, kvh = k_cache.shape[1], k_cache.shape[2]
+    n_rep = h // kvh
+    block_k = min(block_k, s)
+    nk = pl.cdiv(s, block_k)
+    scale = 1.0 / np.sqrt(d)
+
+    kernel = functools.partial(
+        _fd_dyn_kernel, scale=scale, window=window, local_block=local_block,
+        block_k=block_k, kv_len=s, n_rep=n_rep)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b, nk),
+        in_specs=[
+            pl.BlockSpec((1, h, d), lambda b_, j, t_: (b_, 0, 0)),
+            pl.BlockSpec((1, block_k, kvh, d), lambda b_, j, t_: (b_, j, 0, 0)),
+            pl.BlockSpec((1, block_k, kvh, d), lambda b_, j, t_: (b_, j, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, h, d), lambda b_, j, t_: (b_, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((h, d), jnp.float32),
+            pltpu.VMEM((h,), jnp.float32),
+            pltpu.VMEM((h,), jnp.float32),
+        ],
+    )
+    t_arr = jnp.reshape(jnp.asarray(t, jnp.int32), (1,))
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, h, d), q.dtype),
+        interpret=interpret,
+    )(t_arr, q, k_cache, v_cache)
+
+
 def flash_decode(q, k_cache, v_cache, *, t, window=None, local_block=None,
                  block_k=512, interpret=False):
     """q: (B, H, D); caches: (B, S, KV, D); t: python int (current position).

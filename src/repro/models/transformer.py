@@ -363,7 +363,15 @@ def _attn_decode(cfg, w, x, k_cache, v_cache, t, kind, opts):
     if kind in ("full", "global"):
         k_cache = jax.lax.dynamic_update_slice_in_dim(k_cache, k_new, t, axis=1)
         v_cache = jax.lax.dynamic_update_slice_in_dim(v_cache, v_new, t, axis=1)
-        o = L.decode_attention(q, k_cache, v_cache, length=t + 1)
+        if opts.use_kernels:
+            # flash-decoding kernel with the position delivered via
+            # scalar prefetch: the same compiled executable serves every
+            # decode step (a static t would recompile per token, which
+            # the serving executor's compile cache must never see)
+            from repro.kernels.flash_decode import ops as fd_ops
+            o = fd_ops.flash_decode_at(q[:, 0], k_cache, v_cache, t)[:, None]
+        else:
+            o = L.decode_attention(q, k_cache, v_cache, length=t + 1)
     else:
         slot = t % wsize
         k_cache = jax.lax.dynamic_update_slice_in_dim(k_cache, k_new, slot, axis=1)

@@ -105,6 +105,10 @@ class PlanRecord:
     # of whatever correction the planner already applied
     predicted_raw_ms: Optional[float] = None
     realized_exec_ms: Optional[float] = None
+    # where the stage's profile numbers came from: "zoo" (analytic
+    # roofline tables) or "measured" (real-kernel timing artifact) —
+    # lets audit consumers weight calibration trust accordingly
+    provenance: Optional[str] = None
 
 
 @dataclasses.dataclass

@@ -174,6 +174,10 @@ class Telemetry:
         # health-engine alert summary (repro.obs.health), when attached
         self.calibration: dict[str, Any] = {}
         self.health: dict[str, Any] = {}
+        # per-function profile provenance ("zoo" analytic tables vs
+        # "measured" real-kernel artifacts) — surfaces which numbers
+        # the planner trusted for each function this run
+        self.profile_provenance: dict[str, str] = {}
 
     # ---- gateway-side ------------------------------------------------------
     def on_injected(self, app: str):
@@ -272,6 +276,9 @@ class Telemetry:
         cal = getattr(sim.sched, "calibrator", None)
         if cal is not None:
             self.calibration = cal.summary()
+        self.profile_provenance = {
+            n: getattr(p, "provenance", "zoo")
+            for n, p in sim.profiles.items()}
         return self
 
     def _score_sheds(self, sim) -> None:
@@ -430,6 +437,7 @@ class Telemetry:
             "predicted_vs_realized": dict(self.predicted_vs_realized),
             "calibration": dict(self.calibration),
             "health": dict(self.health),
+            "profile_provenance": dict(self.profile_provenance),
             "gpu": dict(self.gpu),
             "latency": self.e2e.to_dict(),
             "per_stage": {

@@ -37,8 +37,12 @@ def test_emulated_zoo_serving_esg_hits():
 
 def test_real_serving_loop_smoke():
     from repro.launch.serve import serve_real
-    out = serve_real(arch="internlm2_1_8b", n_requests=6, slo_ms=60_000,
-                     mean_interval_ms=5.0, gen_len=2, prompt_len=16,
-                     log=lambda *_: None)
-    assert out["n"] == 6
-    assert out["hit_rate"] > 0
+    out = serve_real(arch="internlm2_1_8b", n_requests=6,
+                     batches=(1, 2), quotas=(1.0,), gen_len=2,
+                     prompt_len=16, reps=1, log=lambda *_: None)
+    assert out["n_requests"] == 6
+    assert out["executor"]["executed"] > 0
+    # the CI-asserted invariant: zero recompiles after warmup
+    assert out["executor"]["post_warmup_hit_rate"] == 1.0
+    assert out["telemetry"]["profile_provenance"] == {
+        "internlm2_1_8b": "measured"}
